@@ -1,0 +1,206 @@
+"""Shared benchmark scaffolding: schemes (CL / vanilla SL / CPSL / FL) on
+the paper's LeNet + synthetic non-IID MNIST, with the wireless latency
+simulator pricing every round."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CPSLConfig
+from repro.core import latency as lt
+from repro.core import profile as pf
+from repro.core import resource as rs
+from repro.core.channel import NetworkCfg, device_means, sample_network
+from repro.core.cpsl import CPSL, FLTrainer
+from repro.core.splitting import make_split_model
+from repro.data.pipeline import CPSLDataset
+from repro.data.synthetic import non_iid_split, synthetic_mnist
+from repro.models import lenet
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+@dataclass
+class BenchData:
+    xtr: np.ndarray
+    ytr: np.ndarray
+    xte: np.ndarray
+    yte: np.ndarray
+    device_idx: list
+
+
+def make_data(n_train=12_000, n_test=2_000, n_devices=30,
+              samples_per_device=180, seed=0) -> BenchData:
+    xtr, ytr, xte, yte = synthetic_mnist(n_train, n_test, seed=seed)
+    idx = non_iid_split(ytr, n_devices=n_devices,
+                        samples_per_device=samples_per_device, seed=seed)
+    return BenchData(xtr, ytr, xte, yte, idx)
+
+
+def accuracy(params, data: BenchData) -> float:
+    return lenet.accuracy(params, jnp.asarray(data.xte),
+                          jnp.asarray(data.yte))
+
+
+def paper_network(seed=0, homogeneous=True, bw_mhz=30):
+    ncfg = NetworkCfg(homogeneous=homogeneous,
+                      n_subcarriers=bw_mhz, f_sigma=0.0 if homogeneous
+                      else 0.05e9,
+                      snr_sigma_db=0.0 if homogeneous else 2.0)
+    mu_f, mu_snr = device_means(ncfg, seed)
+    return ncfg, mu_f, mu_snr
+
+
+# -- schemes -----------------------------------------------------------------
+
+def run_cpsl(data: BenchData, rounds: int, cluster_size=5, n_clusters=6,
+             local_epochs=1, lr=0.05, cut=3, seed=0,
+             eval_every=1) -> Dict:
+    """CPSL (paper Alg. 1) + per-round latency with equal spectrum split."""
+    n_devices = len(data.device_idx)
+    ds = CPSLDataset(data.xtr, data.ytr, data.device_idx, batch=16,
+                     seed=seed)
+    ccfg = CPSLConfig(cut_layer=cut, n_clusters=n_clusters,
+                      cluster_size=cluster_size, local_epochs=local_epochs,
+                      lr_device=lr, lr_server=lr)
+    cp = CPSL(make_split_model("lenet", cut), ccfg)
+    state = cp.init_state(jax.random.PRNGKey(seed))
+    ncfg, mu_f, mu_snr = paper_network(seed)
+    prof = pf.paper_constants_profile()
+    rng = np.random.default_rng(seed)
+    hist = {"round": [], "acc": [], "loss": [], "time": []}
+    t = 0.0
+    order = list(range(n_devices))
+    for rnd in range(rounds):
+        clusters = [order[m * cluster_size:(m + 1) * cluster_size]
+                    for m in range(n_clusters)]
+        net = sample_network(ncfg, mu_f, mu_snr, rng)
+        xs = [np.full(cluster_size,
+                      max(ncfg.n_subcarriers // cluster_size, 1))] * n_clusters
+        t += lt.round_latency(1, clusters, xs, net, ncfg, prof, 16,
+                              local_epochs)
+        state, m = cp.run_round(
+            state, lambda mm, ll: jax.tree.map(
+                jnp.asarray, ds.cluster_batch(clusters[mm])),
+            n_clusters=n_clusters)
+        if rnd % eval_every == 0 or rnd == rounds - 1:
+            params, _ = cp.export_params(state)
+            hist["round"].append(rnd)
+            hist["acc"].append(accuracy(params, data))
+            hist["loss"].append(m["loss"])
+            hist["time"].append(t)
+    return hist
+
+
+def run_vanilla_sl(data: BenchData, rounds: int, lr=0.05, cut=3, seed=0,
+                   eval_every=1) -> Dict:
+    """Vanilla SL == CPSL with K=1 and M=N (sequential devices)."""
+    n_devices = len(data.device_idx)
+    return _run_sl_like(data, rounds, 1, n_devices, lr, cut, seed,
+                        eval_every, sl_latency=True)
+
+
+def _run_sl_like(data, rounds, cluster_size, n_clusters, lr, cut, seed,
+                 eval_every, sl_latency=False):
+    ds = CPSLDataset(data.xtr, data.ytr, data.device_idx, batch=16,
+                     seed=seed)
+    ccfg = CPSLConfig(cut_layer=cut, n_clusters=n_clusters,
+                      cluster_size=cluster_size, local_epochs=1,
+                      lr_device=lr, lr_server=lr)
+    cp = CPSL(make_split_model("lenet", cut), ccfg)
+    state = cp.init_state(jax.random.PRNGKey(seed))
+    ncfg, mu_f, mu_snr = paper_network(seed)
+    prof = pf.paper_constants_profile()
+    rng = np.random.default_rng(seed)
+    hist = {"round": [], "acc": [], "loss": [], "time": []}
+    t = 0.0
+    order = list(range(len(data.device_idx)))
+    for rnd in range(rounds):
+        clusters = [order[m * cluster_size:(m + 1) * cluster_size]
+                    for m in range(n_clusters)]
+        net = sample_network(ncfg, mu_f, mu_snr, rng)
+        if sl_latency:
+            t += lt.vanilla_sl_round_latency(1, net, ncfg, prof, 16)
+        else:
+            xs = [np.full(cluster_size,
+                          max(ncfg.n_subcarriers // cluster_size, 1))] \
+                * n_clusters
+            t += lt.round_latency(1, clusters, xs, net, ncfg, prof, 16, 1)
+        state, m = cp.run_round(
+            state, lambda mm, ll: jax.tree.map(
+                jnp.asarray, ds.cluster_batch(clusters[mm])),
+            n_clusters=n_clusters)
+        if rnd % eval_every == 0 or rnd == rounds - 1:
+            params, _ = cp.export_params(state)
+            hist["round"].append(rnd)
+            hist["acc"].append(accuracy(params, data))
+            hist["loss"].append(m["loss"])
+            hist["time"].append(t)
+    return hist
+
+
+def run_fl(data: BenchData, rounds: int, lr=0.1, seed=0,
+           eval_every=1) -> Dict:
+    n_devices = len(data.device_idx)
+    fl = FLTrainer(lenet.loss_fn, lambda k: lenet.init(k),
+                   n_devices=n_devices, lr=lr, local_steps=1)
+    state = fl.init_state(jax.random.PRNGKey(seed))
+    ds = CPSLDataset(data.xtr, data.ytr, data.device_idx, batch=16,
+                     seed=seed)
+    ncfg, mu_f, mu_snr = paper_network(seed)
+    prof = pf.paper_constants_profile()
+    rng = np.random.default_rng(seed)
+    hist = {"round": [], "acc": [], "loss": [], "time": []}
+    t = 0.0
+    for rnd in range(rounds):
+        net = sample_network(ncfg, mu_f, mu_snr, rng)
+        t += lt.fl_round_latency(net, ncfg, prof, 16)
+        b = ds.cluster_batch(list(range(n_devices)))
+        batch = {"image": jnp.asarray(b["image"])[:, None],
+                 "label": jnp.asarray(b["label"])[:, None]}
+        state, loss = fl.round(state, batch)
+        if rnd % eval_every == 0 or rnd == rounds - 1:
+            params = jax.tree.map(lambda t_: t_[0], state["params"])
+            hist["round"].append(rnd)
+            hist["acc"].append(accuracy(params, data))
+            hist["loss"].append(float(loss))
+            hist["time"].append(t)
+    return hist
+
+
+def run_centralized(data: BenchData, steps: int, lr=0.05, batch=80,
+                    seed=0, eval_every=5) -> Dict:
+    params = lenet.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    pool = np.concatenate(data.device_idx)
+
+    @jax.jit
+    def step(params, batch):
+        loss, g = jax.value_and_grad(lenet.loss_fn)(params, batch)
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g), loss
+
+    hist = {"round": [], "acc": [], "loss": [], "time": []}
+    for i in range(steps):
+        pick = rng.choice(pool, batch)
+        b = {"image": jnp.asarray(data.xtr[pick]),
+             "label": jnp.asarray(data.ytr[pick])}
+        params, loss = step(params, b)
+        if i % eval_every == 0 or i == steps - 1:
+            hist["round"].append(i)
+            hist["acc"].append(accuracy(params, data))
+            hist["loss"].append(float(loss))
+            hist["time"].append(0.0)   # CL has no wireless cost model
+    return hist

@@ -1,0 +1,36 @@
+"""Paper Fig. 5: training performance of CPSL vs CL / vanilla SL / FL on
+non-IID data — (a) accuracy vs training rounds, (b) accuracy vs overall
+(simulated wireless) training time."""
+from __future__ import annotations
+
+from benchmarks import bench_common as bc
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 12 if quick else 60
+    data = bc.make_data(n_train=6000 if quick else 20000,
+                        n_test=1000 if quick else 4000,
+                        n_devices=30)
+    out = {
+        "cpsl": bc.run_cpsl(data, rounds, cluster_size=5, n_clusters=6),
+        "sl": bc.run_vanilla_sl(data, max(rounds // 2, 4)),
+        "fl": bc.run_fl(data, rounds),
+        "cl": bc.run_centralized(data, rounds * 12, eval_every=12),
+    }
+    bc.save_result("fig5_training", out)
+    return out
+
+
+def main(quick: bool = True):
+    out = run(quick)
+    print("scheme     final_acc  per-round latency (s)")
+    for k in ("cpsl", "sl", "fl", "cl"):
+        h = out[k]
+        per_round = (h["time"][-1] / max(h["round"][-1], 1)
+                     if h["time"][-1] else float("nan"))
+        print(f"{k:9s}  {h['acc'][-1]:.3f}      {per_round:8.2f}")
+    print("paper per-round: CPSL 3.78  SL 13.90  FL 33.43 (s)")
+
+
+if __name__ == "__main__":
+    main()

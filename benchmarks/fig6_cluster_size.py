@@ -1,0 +1,30 @@
+"""Paper Fig. 6: overall training latency vs number of devices per
+cluster (N_m in {3, 5, 10}; N=30 devices total) — CPSL converges faster
+than SL for every cluster size, with N_m=5 the paper's sweet spot."""
+from __future__ import annotations
+
+from benchmarks import bench_common as bc
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 10 if quick else 50
+    data = bc.make_data(n_train=6000 if quick else 20000,
+                        n_test=1000 if quick else 4000, n_devices=30)
+    out = {}
+    for nm in (3, 5, 10):
+        out[f"cpsl_nm{nm}"] = bc.run_cpsl(
+            data, rounds, cluster_size=nm, n_clusters=30 // nm)
+    out["sl"] = bc.run_vanilla_sl(data, max(rounds // 2, 4))
+    bc.save_result("fig6_cluster_size", out)
+    return out
+
+
+def main(quick: bool = True):
+    out = run(quick)
+    print("variant     final_acc  total latency (s)")
+    for k, h in out.items():
+        print(f"{k:10s}  {h['acc'][-1]:.3f}      {h['time'][-1]:9.1f}")
+
+
+if __name__ == "__main__":
+    main()

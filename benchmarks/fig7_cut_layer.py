@@ -1,0 +1,56 @@
+"""Paper Fig. 7: per-round training latency vs cut layer over simulation
+runs with heterogeneous devices/channels (error bars = 95th percentile).
+The paper finds POOL1 (layer 3) optimal; our faithful LeNet profile
+reproduces a shallow-cut optimum."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import bench_common as bc
+from repro.core import latency as lt
+from repro.core import profile as pf
+from repro.core import resource as rs
+from repro.core.channel import NetworkCfg, device_means, sample_network
+
+
+def run(quick: bool = True, n_runs: int = None) -> dict:
+    n_runs = n_runs or (30 if quick else 300)
+    prof = pf.lenet_profile()
+    ncfg = NetworkCfg(n_devices=30, homogeneous=False)
+    mu_f, mu_snr = device_means(ncfg, 0)
+    rng = np.random.default_rng(0)
+    lat = {v: [] for v in range(1, prof.n_cuts + 1)}
+    for run_i in range(n_runs):
+        net = sample_network(ncfg, mu_f, mu_snr, rng)
+        order = rng.permutation(30)
+        clusters = [list(order[m * 5:(m + 1) * 5]) for m in range(6)]
+        for v in lat:
+            xs = []
+            for c in clusters:
+                x, _ = rs.greedy_spectrum(v, c, net, ncfg, prof, 16, 1)
+                xs.append(x)
+            lat[v].append(lt.round_latency(v, clusters, xs, net, ncfg,
+                                           prof, 16, 1))
+    out = {
+        "cut_layers": list(lat.keys()),
+        "mean": [float(np.mean(lat[v])) for v in lat],
+        "p95": [float(np.percentile(lat[v], 95)) for v in lat],
+        "optimal_cut": int(min(lat, key=lambda v: np.mean(lat[v]))),
+    }
+    bc.save_result("fig7_cut_layer", out)
+    return out
+
+
+def main(quick: bool = True):
+    out = run(quick)
+    from repro.models.lenet import LAYERS
+    print("cut layer    mean latency (s)   p95")
+    for v, m, p in zip(out["cut_layers"], out["mean"], out["p95"]):
+        star = "  <== optimal" if v == out["optimal_cut"] else ""
+        print(f"{v:2d} {LAYERS[v-1]:6s}  {m:10.2f}      {p:8.2f}{star}")
+    print(f"paper: POOL1 (layer 3) optimal; ours: layer "
+          f"{out['optimal_cut']} ({LAYERS[out['optimal_cut']-1]})")
+
+
+if __name__ == "__main__":
+    main()

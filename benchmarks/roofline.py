@@ -1,0 +1,57 @@
+"""Roofline table (deliverable g): aggregates experiments/dryrun JSONs
+into the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def load(include_tagged: bool = True):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if not include_tagged and rec.get("tag"):
+            continue
+        rows.append(rec)
+    return rows
+
+
+def fmt_row(rec) -> str:
+    rl = rec["roofline"]
+    mem = rec["memory"].get("peak_bytes_per_device", -1) / 1e9
+    tag = f"[{rec['tag']}]" if rec.get("tag") else ""
+    dom = rl["bottleneck"]
+    frac = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+            "collective": rl["collective_s"]}
+    dom_t = max(frac.values())
+    # roofline fraction: useful-compute time / dominant term
+    ideal = rl["model_flops"] / (rec["n_devices"] * 197e12)
+    roof_frac = ideal / dom_t if dom_t > 0 else 0.0
+    return (f"| {rec['arch']:22s}{tag} | {rec['cell']:11s} | {rec['mesh']:4s} "
+            f"| {mem:7.2f} | {rl['compute_s']*1e3:9.1f} "
+            f"| {rl['memory_s']*1e3:9.1f} | {rl['collective_s']*1e3:9.1f} "
+            f"| {dom:10s} | {rl['useful_ratio']:5.2f} | {roof_frac:6.3f} |")
+
+
+HEADER = ("| arch | cell | mesh | peak GB/dev | compute ms | memory ms "
+          "| coll ms | bottleneck | useful | roofline-frac |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(quick: bool = True):
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found in", DRYRUN_DIR)
+        print("run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    print(HEADER)
+    for rec in rows:
+        print(fmt_row(rec))
+
+
+if __name__ == "__main__":
+    main()

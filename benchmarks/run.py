@@ -1,0 +1,50 @@
+"""Benchmark harness (deliverable d): one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick mode
+    PYTHONPATH=src python -m benchmarks.run --full
+    PYTHONPATH=src python -m benchmarks.run --only fig7_cut_layer
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (fig5_training, fig6_cluster_size, fig7_cut_layer,
+                        fig8_resource, roofline, table2_latency)
+
+BENCHES = {
+    "table2_latency": table2_latency.main,
+    "fig7_cut_layer": fig7_cut_layer.main,
+    "fig8_resource": fig8_resource.main,
+    "fig5_training": fig5_training.main,
+    "fig6_cluster_size": fig6_cluster_size.main,
+    "roofline": roofline.main,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+    names = [args.only] if args.only else list(BENCHES)
+    failures = []
+    for name in names:
+        print(f"\n{'='*72}\n== {name} (paper {name.split('_')[0]})\n{'='*72}",
+              flush=True)
+        t0 = time.time()
+        try:
+            BENCHES[name](quick)
+            print(f"-- {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing: msgpack+zstd payloads, atomic renames,
+async save thread, keep-k GC, and *elastic* restore (arrays are stored as
+host numpy and re-placed under whatever mesh/sharding the restoring job
+uses — a checkpoint written on one topology restores on another).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pp in path:
+        if hasattr(pp, "key"):
+            parts.append(str(pp.key))
+        elif hasattr(pp, "idx"):
+            parts.append(str(pp.idx))
+        else:
+            parts.append(str(pp))
+    return "/".join(parts)
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    shape = list(a.shape)              # before ascontiguousarray: it
+    a = np.ascontiguousarray(a)        # promotes 0-d -> (1,)
+    # dtype by NAME: extension dtypes (bfloat16 via ml_dtypes) have
+    # opaque .str codes ('V2') that frombuffer can't reconstruct
+    return {"dtype": a.dtype.name, "shape": shape, "data": a.tobytes()}
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    dt = np.dtype(jnp.dtype(d["dtype"]))
+    return np.frombuffer(d["data"], dtype=dt).reshape(d["shape"])
+
+
+def serialize(tree) -> bytes:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = {}
+    for path, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        payload[_path_str(path)] = _pack_array(arr)
+    raw = msgpack.packb(payload, use_bin_type=True)
+    return zstd.ZstdCompressor(level=3).compress(raw)
+
+
+def deserialize(blob: bytes, target) -> Any:
+    raw = zstd.ZstdDecompressor().decompress(blob)
+    payload = msgpack.unpackb(raw, raw=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        if key not in payload:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = _unpack_array(payload[key])
+        want = np.dtype(leaf.dtype) if hasattr(leaf, "dtype") else arr.dtype
+        arr = arr.astype(want, copy=False)
+        if hasattr(leaf, "sharding") and leaf.sharding is not None \
+                and hasattr(leaf.sharding, "mesh"):
+            leaves.append(jax.device_put(arr, leaf.sharding))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target), leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ----------------------------------------------------------------
+
+    def _write(self, blob: bytes, step: int):
+        final = os.path.join(self.dir, f"ckpt_{step:010d}")
+        tmp = final + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)          # atomic commit
+        self._gc()
+
+    def save(self, state, step: int, block: bool = True):
+        blob = serialize(state)        # device_get happens sync (consistent)
+        if self.async_save and not block:
+            self.wait()
+            self._thread = threading.Thread(target=self._write,
+                                            args=(blob, step), daemon=True)
+            self._thread.start()
+        else:
+            self._write(blob, step)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ---------------------------------------------------------------
+
+    def steps(self):
+        out = []
+        for fn in os.listdir(self.dir):
+            m = re.fullmatch(r"ckpt_(\d+)", fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, target, step: Optional[int] = None):
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        with open(os.path.join(self.dir, f"ckpt_{step:010d}"), "rb") as f:
+            blob = f.read()
+        return deserialize(blob, target)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            try:
+                os.remove(os.path.join(self.dir, f"ckpt_{s:010d}"))
+            except OSError:
+                pass

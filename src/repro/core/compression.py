@@ -1,0 +1,69 @@
+"""Upload compression for device-side model aggregation (reduces xi_d on
+the uplink — the paper's DMT latency component).
+
+Top-k sparsification with error feedback (Stich et al.) and int8
+quantize-dequantize. Compression operates leaf-wise on delta pytrees.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_mask(x: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    """Keep the top-`ratio` fraction of entries by magnitude."""
+    if x.ndim == 0:
+        return x
+    flat = jnp.abs(x.reshape(-1))
+    k = max(int(ratio * flat.size), 1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress_topk(delta, ratio: float):
+    return jax.tree.map(lambda t: topk_mask(t, ratio), delta)
+
+
+def compress_int8(delta):
+    def q(t):
+        t32 = t.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(t32)), 1e-12) / 127.0
+        qt = jnp.clip(jnp.round(t32 / scale), -127, 127).astype(jnp.int8)
+        return (qt.astype(jnp.float32) * scale).astype(t.dtype)
+
+    return jax.tree.map(q, delta)
+
+
+def compress(delta, method: str, ratio: float = 0.1):
+    if method == "topk":
+        return compress_topk(delta, ratio)
+    if method == "int8":
+        return compress_int8(delta)
+    raise ValueError(method)
+
+
+def compression_ratio(method: str, ratio: float = 0.1) -> float:
+    """Effective uplink size multiplier (for the latency model's xi_d).
+
+    topk: value+index per kept entry ~= 2x per-entry cost on ratio entries.
+    int8: 8/32 of the dense float32 payload.
+    """
+    if method == "none":
+        return 1.0
+    if method == "topk":
+        return min(2.0 * ratio, 1.0)
+    if method == "int8":
+        return 0.25
+    raise ValueError(method)
+
+
+def apply_with_error_feedback(delta, ef, method: str, ratio: float = 0.1
+                              ) -> Tuple:
+    """compressed(delta + ef), new ef = residual."""
+    corrected = jax.tree.map(lambda d, e: d + e.astype(d.dtype), delta, ef)
+    comp = compress(corrected, method, ratio)
+    new_ef = jax.tree.map(lambda c, z: (c - z).astype(jnp.float32),
+                          corrected, comp)
+    return comp, new_ef

@@ -1,0 +1,297 @@
+"""CPSL — Cluster-based Parallel Split Learning (paper Alg. 1).
+
+"First-parallel-then-sequential": within a cluster, K device-side models
+train in parallel against ONE shared server-side model fed the concatenated
+smashed data (eqs. 4-7); after L local epochs the device-side models are
+FedAvg-aggregated (eq. 8) and handed to the next cluster (eq. 9).
+
+Two train-step implementations:
+  - ``fused``:    one jax.grad through server+device models. The chain rule
+                  *is* the smashed-gradient protocol; this is the
+                  performance path (single fused HLO, no duplicate device
+                  forward).
+  - ``protocol``: the explicit two-phase wire protocol — device FP ->
+                  smashed data -> server FP/BP -> smashed gradient ->
+                  device BP. Bit-identical updates (tested); used to
+                  demonstrate faithfulness and to price the phases.
+
+Vanilla SL is CPSL with cluster_size=1 / n_clusters=N (paper §III). FL is
+the v=V degenerate case (`FLTrainer`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import CPSLConfig
+from repro.core import compression as cmp
+from repro.core import partitioning as pt
+from repro.core.splitting import SplitModel
+
+
+def _flat(tree):
+    return jax.tree.map(lambda t: t.reshape((-1,) + t.shape[2:]), tree)
+
+
+class CPSL:
+    def __init__(self, split: SplitModel, ccfg: CPSLConfig,
+                 dev_opt: Optional[optim.Optimizer] = None,
+                 srv_opt: Optional[optim.Optimizer] = None):
+        self.split = split
+        self.ccfg = ccfg
+        self.dev_opt = dev_opt or optim.make(ccfg.optimizer, ccfg.lr_device,
+                                             momentum=ccfg.momentum,
+                                             weight_decay=ccfg.weight_decay)
+        self.srv_opt = srv_opt or optim.make(ccfg.optimizer, ccfg.lr_server,
+                                             momentum=ccfg.momentum,
+                                             weight_decay=ccfg.weight_decay)
+        self._step_fn = (self._fused_step if ccfg.fused_step
+                         else self._protocol_step)
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, key) -> dict:
+        k1, k2, k3 = jax.random.split(key, 3)
+        K = 1 if self.ccfg.share_device_params else self.ccfg.cluster_size
+        dev0 = self.split.init_device(k1)
+        dev = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (K,) + t.shape), dev0)
+        srv = self.split.init_server(k2)
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "dev": dev,
+            "dev_opt": self.dev_opt.init(dev),
+            "srv": srv,
+            "srv_opt": self.srv_opt.init(srv),
+            "rng": k3,
+        }
+        if self.ccfg.compress_uploads != "none":
+            state["ef"] = jax.tree.map(
+                lambda t: jnp.zeros_like(t, jnp.float32), dev)
+        return state
+
+    # -- loss ---------------------------------------------------------------
+
+    def _total_loss(self, dev, srv, batch):
+        """batch leaves: (K, B, ...). Returns (scalar, metrics)."""
+        if self.ccfg.share_device_params:
+            flat = _flat(batch)
+            dev0 = jax.tree.map(lambda t: t[0], dev)
+            smashed, aux_d = self.split.device_apply(dev0, flat)
+        else:
+            K = jax.tree.leaves(dev)[0].shape[0]
+            ax = pt.spmd_client_axes(K)
+            with pt.exclude_axes(ax):
+                smashed, aux_d = jax.vmap(
+                    self.split.device_apply, spmd_axis_name=ax)(dev, batch)
+            # eq. (5): concatenate client smashed data into the server batch
+            smashed = smashed.reshape((-1,) + smashed.shape[2:])
+            aux_d = aux_d.mean()
+            flat = _flat(batch)
+        smashed = pt.shard(smashed, "batch")
+        loss, aux_s = self.split.server_loss(srv, smashed, flat)
+        total = loss + aux_d + aux_s
+        return total, {"loss": loss, "aux": aux_d + aux_s}
+
+    # -- fused step ----------------------------------------------------------
+
+    def fused_step_impl(self, state, batch):
+        """Unjitted fused step — the dry-run wraps this with explicit
+        in/out shardings; interactive use goes through the jitted method.
+
+        ccfg.microbatches > 1 splits the per-client batch B and
+        accumulates gradients over a rematted scan (activation memory
+        scales 1/m; the straggler/latency model is unaffected — the
+        device still processes B samples per epoch)."""
+        grad_fn = jax.value_and_grad(self._total_loss, argnums=(0, 1),
+                                     has_aux=True)
+        m = self.ccfg.microbatches
+        if m > 1:
+            mb = jax.tree.map(
+                lambda t: jnp.moveaxis(
+                    t.reshape((t.shape[0], m, t.shape[1] // m)
+                              + t.shape[2:]), 1, 0), batch)
+
+            def acc(carry, mbatch):
+                g_dev, g_srv, loss, aux = carry
+                (_, mt), (gd, gs) = grad_fn(state["dev"], state["srv"],
+                                            mbatch)
+                g_dev = jax.tree.map(lambda a, b: a + b / m, g_dev, gd)
+                g_srv = jax.tree.map(lambda a, b: a + b / m, g_srv, gs)
+                return (g_dev, g_srv, loss + mt["loss"] / m,
+                        aux + mt["aux"] / m), None
+
+            zeros = lambda t: jax.tree.map(  # noqa: E731
+                lambda p: jnp.zeros(p.shape, jnp.float32), t)
+            (g_dev, g_srv, loss, aux), _ = jax.lax.scan(
+                acc, (zeros(state["dev"]), zeros(state["srv"]),
+                      jnp.zeros(()), jnp.zeros(())), mb)
+            metrics = {"loss": loss, "aux": aux}
+        else:
+            (_, metrics), (g_dev, g_srv) = grad_fn(state["dev"],
+                                                   state["srv"], batch)
+        new_dev, dev_opt = self.dev_opt.step(g_dev, state["dev_opt"],
+                                             state["dev"], state["step"])
+        new_srv, srv_opt = self.srv_opt.step(g_srv, state["srv_opt"],
+                                             state["srv"], state["step"])
+        state = dict(state, dev=new_dev, dev_opt=dev_opt, srv=new_srv,
+                     srv_opt=srv_opt, step=state["step"] + 1)
+        return state, metrics
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _fused_step(self, state, batch):
+        # NOTE: no donation here — interactive/test use keeps the input
+        # state alive; the dry-run/launcher jits fused_step_impl with
+        # donate_argnums for production memory behaviour.
+        return self.fused_step_impl(state, batch)
+
+    # -- explicit two-phase protocol step -------------------------------------
+
+    def protocol_step_impl(self, state, batch):
+        assert not self.ccfg.share_device_params
+        split = self.split
+
+        # Phase 1 (paper steps 3, eq. 4): device FP -> smashed data
+        Kc = jax.tree.leaves(state["dev"])[0].shape[0]
+        ax = pt.spmd_client_axes(Kc)
+        with pt.exclude_axes(ax):
+            smashed, _ = jax.vmap(split.device_apply,
+                                  spmd_axis_name=ax)(state["dev"], batch)
+        K, B = smashed.shape[:2]
+        smashed_flat = smashed.reshape((-1,) + smashed.shape[2:])
+        flat = _flat(batch)
+
+        # Phase 2 (eqs. 5-6): server FP/BP; emits smashed-data gradient
+        def srv_loss(srv, sm):
+            loss, aux = split.server_loss(srv, sm, flat)
+            return loss + aux, loss
+
+        (_, loss), (g_srv, g_smashed) = jax.value_and_grad(
+            srv_loss, argnums=(0, 1), has_aux=True)(state["srv"],
+                                                    smashed_flat)
+        new_srv, srv_opt = self.srv_opt.step(g_srv, state["srv_opt"],
+                                             state["srv"], state["step"])
+
+        # Phase 3 (eq. 7): device BP from the smashed gradient
+        g_smashed = g_smashed.reshape(smashed.shape)
+
+        def dev_bwd(dp, b, g):
+            _, vjp = jax.vjp(lambda q: split.device_apply(q, b)[0], dp)
+            return vjp(g)[0]
+
+        with pt.exclude_axes(ax):
+            g_dev = jax.vmap(dev_bwd, spmd_axis_name=ax)(state["dev"],
+                                                         batch, g_smashed)
+        new_dev, dev_opt = self.dev_opt.step(g_dev, state["dev_opt"],
+                                             state["dev"], state["step"])
+        state = dict(state, dev=new_dev, dev_opt=dev_opt, srv=new_srv,
+                     srv_opt=srv_opt, step=state["step"] + 1)
+        return state, {"loss": loss, "aux": jnp.zeros(())}
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _protocol_step(self, state, batch):
+        return self.protocol_step_impl(state, batch)
+
+    def cluster_step(self, state, batch):
+        """One local epoch for the active cluster (paper Alg. 1 lines 7-19)."""
+        return self._step_fn(state, batch)
+
+    # -- aggregation (eq. 8) --------------------------------------------------
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _fedavg(self, state, weights):
+        dev = state["dev"]
+        ccfg = self.ccfg
+
+        if ccfg.compress_uploads != "none":
+            ref = jax.tree.map(lambda t: t[:1], dev)   # broadcast model
+            delta = jax.tree.map(lambda t, r: t - r, dev, ref)
+            delta, ef = cmp.apply_with_error_feedback(
+                delta, state["ef"], ccfg.compress_uploads, ccfg.compress_topk)
+            dev = jax.tree.map(lambda r, d: r + d, ref, delta)
+            state = dict(state, ef=ef)
+
+        def avg(t):
+            w = weights.astype(jnp.float32)
+            w = w / jnp.maximum(w.sum(), 1e-12)
+            m = jnp.tensordot(w, t.astype(jnp.float32), axes=(0, 0))
+            return jnp.broadcast_to(m[None].astype(t.dtype), t.shape)
+
+        new_dev = jax.tree.map(avg, dev)
+        return dict(state, dev=new_dev)
+
+    def fedavg(self, state, data_sizes: Optional[jnp.ndarray] = None):
+        K = self.ccfg.cluster_size
+        if self.ccfg.share_device_params:
+            return state   # single shared device model: nothing to average
+        w = (jnp.ones((K,)) if data_sizes is None
+             else jnp.asarray(data_sizes, jnp.float32))
+        if self.ccfg.straggler_dropout > 0:
+            rng, sub = jax.random.split(state["rng"])
+            keep = jax.random.bernoulli(
+                sub, 1.0 - self.ccfg.straggler_dropout, (K,))
+            # never drop everyone
+            keep = keep.at[0].set(True)
+            w = w * keep
+            state = dict(state, rng=rng)
+        return self._fedavg(state, w)
+
+    # -- round orchestration (Alg. 1 lines 2-24) ------------------------------
+
+    def run_round(self, state, batch_fn: Callable[[int, int], dict],
+                  n_clusters: Optional[int] = None) -> tuple:
+        """batch_fn(m, l) -> batch with (K, B, ...) leaves for cluster m,
+        local epoch l. Clusters run sequentially (inter-cluster, eq. 9)."""
+        M = n_clusters or self.ccfg.n_clusters
+        metrics = []
+        for m in range(M):
+            for l in range(self.ccfg.local_epochs):
+                state, mt = self.cluster_step(state, batch_fn(m, l))
+                metrics.append(mt)
+            state = self.fedavg(state)
+        loss = float(jnp.mean(jnp.stack([m["loss"] for m in metrics])))
+        return state, {"loss": loss}
+
+    def export_params(self, state):
+        dev0 = jax.tree.map(lambda t: t[0], state["dev"])
+        return self.split.export(dev0, state["srv"])
+
+
+# --------------------------------------------------------------------------
+# FL comparator (the paper's v = V degenerate case)
+# --------------------------------------------------------------------------
+
+class FLTrainer:
+    """All devices train the FULL model locally; FedAvg each round."""
+
+    def __init__(self, loss_fn: Callable, init_fn: Callable, n_devices: int,
+                 lr: float = 0.1, local_steps: int = 1):
+        self.loss_fn, self.init_fn = loss_fn, init_fn
+        self.N, self.lr, self.local_steps = n_devices, lr, local_steps
+
+    def init_state(self, key):
+        p0 = self.init_fn(key)
+        return {"params": jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (self.N,) + t.shape), p0)}
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def round(self, state, batches):
+        """batches leaves: (N, local_steps, B, ...)."""
+        def local(params, bs):
+            def one(params, b):
+                loss, g = jax.value_and_grad(self.loss_fn)(params, b)
+                params = jax.tree.map(
+                    lambda p, gg: p - self.lr * gg, params, g)
+                return params, loss
+
+            return jax.lax.scan(one, params, bs)
+
+        params, losses = jax.vmap(local)(state["params"], batches)
+        avg = jax.tree.map(
+            lambda t: jnp.broadcast_to(t.mean(0, keepdims=True)
+                                       .astype(t.dtype), t.shape), params)
+        return {"params": avg}, losses.mean()

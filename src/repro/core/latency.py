@@ -1,0 +1,123 @@
+"""CPSL training-latency model — exact implementation of paper §V eqs
+(14)-(26).
+
+Per cluster m the round is: starting phase d_S (eq. 19), (L-1) inner phases
+d_I (eq. 22), ending phase d_E (eq. 24); per-round latency sums clusters
+(eq. 25). All the straggler `max` terms are kept.
+
+A ``CutProfile`` supplies the cut-layer-dependent constants:
+  xi_d(v)   device-side model bytes->bits   (eq. 15, 23)
+  xi_s(v)   smashed data bits per sample    (eq. 17)
+  xi_g(v)   smashed-grad bits (paper treats this per *mini-batch*, eq. 20 —
+            we follow the paper; physical_gradients=True uses B*xi_g)
+  gamma_dF/dB(v), gamma_sF/sB(v) FLOPs per sample.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.channel import NetworkCfg, NetworkState
+
+
+@dataclass
+class CutProfile:
+    """Arrays indexed by cut layer v in {1..V} (index 0 == v=1)."""
+    name: str
+    xi_d: np.ndarray       # bits
+    xi_s: np.ndarray       # bits per sample
+    xi_g: np.ndarray       # bits (per mini-batch, paper eq. 20)
+    gamma_dF: np.ndarray   # FLOPs per sample
+    gamma_dB: np.ndarray
+    gamma_sF: np.ndarray
+    gamma_sB: np.ndarray
+
+    @property
+    def n_cuts(self) -> int:
+        return len(self.xi_d)
+
+    def at(self, v: int) -> dict:
+        i = v - 1
+        return {k: getattr(self, k)[i]
+                for k in ("xi_d", "xi_s", "xi_g", "gamma_dF", "gamma_dB",
+                          "gamma_sF", "gamma_sB")}
+
+
+def cluster_latency(v: int, devices: Sequence[int], x: np.ndarray,
+                    net: NetworkState, ncfg: NetworkCfg, prof: CutProfile,
+                    B: int, L: int, physical_gradients: bool = False
+                    ) -> float:
+    """Per-cluster round latency D_m (eqs. 15-24). ``x``: subcarriers per
+    device in the cluster (len == len(devices))."""
+    c = prof.at(v)
+    dev = np.asarray(devices)
+    x = np.asarray(x, dtype=np.float64)
+    f = net.f[dev] * ncfg.kappa
+    r = net.rate[dev]
+    C = ncfg.n_subcarriers
+    K = len(dev)
+    xi_g = c["xi_g"] * (B if physical_gradients else 1.0)
+
+    tau_b = c["xi_d"] / (C * r)                      # (15) model distribution
+    tau_d = B * c["gamma_dF"] / f                    # (16) device FP
+    tau_s = B * c["xi_s"] / (x * r)                  # (17) smashed uplink
+    tau_e = K * B * (c["gamma_sF"] + c["gamma_sB"]) / (ncfg.f_server * ncfg.kappa)  # (18)
+    tau_g = xi_g / (x * r)                           # (20) smashed-grad DL
+    tau_u = B * c["gamma_dB"] / f                    # (21) device BP
+    tau_t = c["xi_d"] / (x * r)                      # (23) device-model UL
+
+    d_S = np.max(tau_b + tau_d + tau_s) + tau_e      # (19)
+    d_I = np.max(tau_g + tau_u + tau_d + tau_s) + tau_e  # (22)
+    d_E = np.max(tau_g + tau_u + tau_t)              # (24)
+    return float(d_S + (L - 1) * d_I + d_E)          # D_m
+
+
+def round_latency(v: int, clusters: Sequence[Sequence[int]],
+                  xs: Sequence[np.ndarray], net: NetworkState,
+                  ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
+                  physical_gradients: bool = False) -> float:
+    """One-round latency D^t = sum_m D_m (eq. 25)."""
+    return sum(cluster_latency(v, ds, x, net, ncfg, prof, B, L,
+                               physical_gradients)
+               for ds, x in zip(clusters, xs))
+
+
+# -- benchmark comparators (paper §VIII-B) ----------------------------------
+
+def vanilla_sl_round_latency(v: int, net: NetworkState, ncfg: NetworkCfg,
+                             prof: CutProfile, B: int,
+                             iters_per_device: int = 1) -> float:
+    """Vanilla SL: devices sequential, each uses ALL subcarriers. One visit
+    per device: model DL + (FP + smashed UL + server + grad DL + BP) *
+    iters + model UL."""
+    c = prof.at(v)
+    C = ncfg.n_subcarriers
+    total = 0.0
+    for n in range(len(net.f)):
+        f = net.f[n] * ncfg.kappa
+        r = net.rate[n] * C
+        t_iter = (B * c["gamma_dF"] / f + B * c["xi_s"] / r
+                  + B * (c["gamma_sF"] + c["gamma_sB"])
+                  / (ncfg.f_server * ncfg.kappa)
+                  + c["xi_g"] / r + B * c["gamma_dB"] / f)
+        total += c["xi_d"] / r + iters_per_device * t_iter + c["xi_d"] / r
+    return total
+
+
+def fl_round_latency(net: NetworkState, ncfg: NetworkCfg, prof: CutProfile,
+                     B: int, local_iters: int = 1) -> float:
+    """FL: whole model trained on-device in parallel; equal subcarrier split.
+    Uses v = V (empty server side): xi at the last cut = full model."""
+    V = prof.n_cuts
+    c = prof.at(V)
+    whole_F = c["gamma_dF"] + c["gamma_sF"]
+    whole_B = c["gamma_dB"] + c["gamma_sB"]
+    xi_model = c["xi_d"]   # full model bits at v=V
+    N = len(net.f)
+    x = max(ncfg.n_subcarriers // N, 1)
+    per_dev = (xi_model / (ncfg.n_subcarriers * net.rate)
+               + local_iters * B * (whole_F + whole_B) / (net.f * ncfg.kappa)
+               + xi_model / (x * net.rate))
+    return float(np.max(per_dev))

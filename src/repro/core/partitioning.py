@@ -1,0 +1,338 @@
+"""Logical-axis partitioning.
+
+Model code annotates activations/params with *logical* axis names; a rule
+table maps logical names to mesh axes. Constraints are no-ops unless a mesh
+context has been installed (so unit tests on 1 CPU device run unannotated).
+
+Weight layout philosophy (baseline; see EXPERIMENTS.md §Perf for iterations):
+  - big matrices 2D-sharded (fsdp='data' x tp='model'); XLA SPMD resolves the
+    contraction by all-gathering the (small) weight shard over 'data' before
+    the matmul -> ZeRO-3 semantics without hand-written collectives.
+  - activations sharded on batch/client axes over ('pod','data'); hidden
+    (d_model) replicated at block boundaries; heads/ff/vocab sharded over
+    'model' inside blocks (megatron TP).
+  - expert axis of MoE weights sharded over 'data' (expert parallelism).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "clients": ("pod", "data"),     # stacked CPSL client axis
+    "batch": ("pod", "data"),
+    "seq": None,                    # NOTE: seq-sharding the residual
+                                    # stream (Megatron-SP) trips an XLA
+                                    # SPMD partitioner CHECK in this jax
+                                    # build (spmd_partitioner_util.cc:2300)
+                                    # when combined with scanned attention
+                                    # chunk slicing — see EXPERIMENTS.md
+    "kv_seq": "model",              # decode KV caches: shard seq over model
+    "long_seq": ("data", "model"),  # batch=1 long-context: shard seq hard
+    "embed": None,                  # d_model replicated at block boundary
+    "heads": "model",
+    "q_seq": "model",               # seq-parallel attention fallback
+    "ff": "model",
+    "vocab": "model",
+    "expert": "data",
+    "expert_ff": "model",           # expert banks: 2D (expert x ff)
+    "ce_batch": ("pod", "data"),    # CE chunks: batch over data only so
+    "ce_vocab": "model",            # vocab (and dW) shard over model
+    "fsdp": "data",
+    "layers": None,
+    "conv": None,
+    "state": None,
+}
+
+
+# Pure-FSDP profile: data parallelism over the whole mesh (batch sharded
+# 256-way), weights ZeRO-3-sharded over (data, model) and all-gathered per
+# layer. No TP — activations (incl. remat-saved layer inputs) divide by
+# the full chip count. Wins when activation memory dominates (long-seq
+# training of big dense models).
+FSDP_RULES = {
+    "clients": ("pod", "data", "model"),
+    "batch": ("pod", "data", "model"),
+    "seq": None,
+    "kv_seq": "model",
+    "long_seq": ("data", "model"),
+    "embed": None,
+    "heads": None,
+    "q_seq": None,
+    "ff": None,
+    "vocab": "model",              # weights only; activation constraints
+    "expert": "data",              # drop duplicate axes automatically
+    "expert_ff": "model",
+    "ce_batch": ("pod", "data"),
+    "ce_vocab": "model",
+    "fsdp": ("data", "model"),
+    "layers": None,
+    "conv": None,
+    "state": None,
+}
+
+PROFILES = {"tp": DEFAULT_RULES, "fsdp": FSDP_RULES}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: dict = dict(DEFAULT_RULES)
+    excluded: tuple = ()
+
+
+_CTX = _Ctx()
+
+
+class exclude_axes:
+    """Inside vmap(spmd_axis_name=axes) bodies, those mesh axes may not
+    appear in inner sharding constraints — this scope filters them out."""
+
+    def __init__(self, axes):
+        self.axes = tuple(axes or ())
+
+    def __enter__(self):
+        self._prev = _CTX.excluded
+        _CTX.excluded = tuple(set(self._prev) | set(self.axes))
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.excluded = self._prev
+        return False
+
+
+def enable(mesh: Mesh, rules: Optional[dict] = None,
+           profile: str = "tp") -> None:
+    _CTX.mesh = mesh
+    _CTX.rules = dict(PROFILES[profile])
+    if rules:
+        _CTX.rules.update(rules)
+
+
+def disable() -> None:
+    _CTX.mesh = None
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+class use_mesh:
+    """Context manager: install mesh (+rule overrides) for constraint emission."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None,
+                 profile: str = "tp"):
+        self.mesh, self.rules, self.profile = mesh, rules, profile
+
+    def __enter__(self):
+        self._prev = (_CTX.mesh, _CTX.rules)
+        enable(self.mesh, self.rules, self.profile)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._prev
+        return False
+
+
+def _resolve(axis: Optional[str]):
+    if axis is None:
+        return None
+    rule = _CTX.rules.get(axis, None)
+    if rule is None:
+        return None
+    mesh_axes = _CTX.mesh.axis_names
+    if isinstance(rule, tuple):
+        present = tuple(a for a in rule if a in mesh_axes
+                        and a not in _CTX.excluded)
+        return present if present else None
+    if rule in _CTX.excluded:
+        return None
+    return rule if rule in mesh_axes else None
+
+
+def _fit(r, dim_size: int):
+    """Shrink a resolved mesh-axis assignment until it divides dim_size
+    (tuples drop trailing axes); None if nothing fits."""
+    if r is None:
+        return None
+    if isinstance(r, tuple):
+        rr = tuple(r)
+        while rr:
+            n = 1
+            for a in rr:
+                n *= _CTX.mesh.shape[a]
+            if dim_size % n == 0:
+                return rr if len(rr) > 1 else rr[0]
+            rr = rr[:-1]
+        return None
+    return r if dim_size % _CTX.mesh.shape[r] == 0 else None
+
+
+def spec(*axes: Optional[str]) -> P:
+    """Logical axes -> PartitionSpec under the active rules/mesh."""
+    return P(*[_resolve(a) for a in axes])
+
+
+def axis_size(logical: Optional[str]) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 if inactive)."""
+    if _CTX.mesh is None:
+        return 1
+    r = _resolve(logical)
+    if r is None:
+        return 1
+    if isinstance(r, tuple):
+        n = 1
+        for a in r:
+            n *= _CTX.mesh.shape[a]
+        return n
+    return _CTX.mesh.shape[r]
+
+
+def shard(x, *axes: Optional[str]):
+    """with_sharding_constraint by logical axes; identity if no mesh.
+    Axes that don't divide the dim are shrunk/dropped; mesh axes already
+    used by an earlier dim are dropped (no duplicate specs)."""
+    if _CTX.mesh is None:
+        return x
+    used = set()
+    resolved = []
+    for i, a in enumerate(axes):
+        r = _fit(_resolve(a), x.shape[i]) if i < x.ndim else None
+        if r is not None:
+            parts = r if isinstance(r, tuple) else (r,)
+            if any(p in used for p in parts):
+                parts = tuple(p for p in parts if p not in used)
+                r = _fit(parts if parts else None, x.shape[i]) \
+                    if parts else None
+            if r is not None:
+                used.update(r if isinstance(r, tuple) else (r,))
+        resolved.append(r)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, P(*resolved)))
+
+
+def sharding(*axes: Optional[str]) -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    return NamedSharding(_CTX.mesh, spec(*axes))
+
+
+def spmd_client_axes(K: int):
+    """Mesh axes for vmap(spmd_axis_name=...) over the stacked client dim
+    (None when no mesh / nothing divides K). Keeps the client axis sharded
+    INSIDE the vmapped device-model computation."""
+    if _CTX.mesh is None:
+        return None
+    r = _fit(_resolve("clients"), K)
+    if r is None:
+        return None
+    return r if isinstance(r, tuple) else (r,)
+
+
+# --------------------------------------------------------------------------
+# parameter partition specs, matched by path
+# --------------------------------------------------------------------------
+
+# (regex on 'a/b/c' path, logical axes per dim of the leaf)
+# Stacked scan params get a leading 'layers' axis prepended automatically
+# when rank exceeds the rule length by one.
+PARAM_RULES = [
+    (r"embed/tok$", ("vocab", "embed_w")),
+    (r"embed/head$", ("embed", "vocab")),
+    (r"(^|/)head$", ("embed", "vocab")),
+    (r"(router)$", ("embed", None)),
+    (r"moe/w_gate$", ("expert", None, "expert_ff")),
+    (r"moe/w_up$", ("expert", None, "expert_ff")),
+    (r"moe/w_down$", ("expert", "expert_ff", None)),
+    (r"(wq|wk|wv|w_up|w_gate|w_dkv|w_uk|w_uv|in_proj)/w$", ("fsdp", "ff")),
+    (r"(wo|w_down|out_proj)/w$", ("ff", "fsdp")),
+    (r"conv_w$", (None, None)),
+    (r".*", None),  # biases, norms, scalars: replicated
+]
+
+# embed_w: vocab-sharded table keeps its d_model dim replicated
+_EXTRA_LOGICAL = {"embed_w": None}
+
+
+def _resolve_param(axis):
+    if axis in _EXTRA_LOGICAL:
+        return _EXTRA_LOGICAL[axis]
+    return _resolve(axis)
+
+
+def param_specs(params, stacked_prefixes: Sequence[str] = ("stack",
+                                                           "enc_stack",
+                                                           "dec_stack")):
+    """PartitionSpec pytree for a param pytree, by path rules."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def path_str(path):
+        parts = []
+        for pp in path:
+            if hasattr(pp, "key"):
+                parts.append(str(pp.key))
+            elif hasattr(pp, "idx"):
+                parts.append(str(pp.idx))
+        return "/".join(parts)
+
+    def _mesh_size(r):
+        if r is None:
+            return 1
+        if isinstance(r, tuple):
+            n = 1
+            for a in r:
+                n *= _CTX.mesh.shape[a]
+            return n
+        return _CTX.mesh.shape[r]
+
+    out = []
+    for path, leaf in flat:
+        ps = path_str(path)
+        stacked = any(re.search(rf"(^|/){pfx}/", ps)
+                      for pfx in stacked_prefixes)
+        chosen = None
+        for pat, axes in PARAM_RULES:
+            if re.search(pat, ps):
+                chosen = axes
+                break
+        if chosen is None:
+            resolved = P()
+        else:
+            rk = leaf.ndim - (1 if stacked else 0)
+            if rk == len(chosen):
+                dims = ([None] if stacked else []) \
+                    + [_resolve_param(a) for a in chosen]
+                # fit to dims (e.g. vocab 50280 on 16-way model) and
+                # drop duplicate mesh axes
+                used = set()
+                fitted = []
+                for i, r in enumerate(dims):
+                    r = _fit(r, leaf.shape[i])
+                    if r is not None:
+                        parts = r if isinstance(r, tuple) else (r,)
+                        if any(p in used for p in parts):
+                            parts = tuple(p for p in parts
+                                          if p not in used)
+                            r = _fit(parts or None, leaf.shape[i]) \
+                                if parts else None
+                        if r is not None:
+                            used.update(r if isinstance(r, tuple)
+                                        else (r,))
+                    fitted.append(r)
+                resolved = P(*fitted)
+            else:
+                resolved = P()
+        out.append(resolved)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), out)
+
+
+def named_shardings(params, mesh: Optional[Mesh] = None, **kw):
+    mesh = mesh or _CTX.mesh
+    specs = param_specs(params, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,194 @@
+"""Two-timescale resource management (paper §VII).
+
+  Alg. 2: SAA cut-layer selection (large timescale).
+  Alg. 3: greedy subcarrier allocation (diminishing gains).
+  Alg. 4: Gibbs-sampling device clustering with embedded Alg. 3.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.channel import NetworkCfg, NetworkState, device_means, sample_network
+from repro.core.latency import CutProfile, cluster_latency
+
+
+# --------------------------------------------------------------------------
+# Alg. 3 — greedy subcarrier allocation for one cluster
+# --------------------------------------------------------------------------
+
+def greedy_spectrum(v: int, devices: Sequence[int], net: NetworkState,
+                    ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
+                    C: Optional[int] = None) -> Tuple[np.ndarray, float]:
+    """Allocate C subcarriers to the cluster's devices: start at 1 each,
+    then repeatedly give one to the device yielding the largest latency
+    reduction. Returns (x, D_m)."""
+    C = ncfg.n_subcarriers if C is None else C
+    K = len(devices)
+    assert C >= K, "need at least one subcarrier per device"
+    x = np.ones(K, dtype=np.int64)
+
+    def lat(xv):
+        return cluster_latency(v, devices, xv, net, ncfg, prof, B, L)
+
+    cur = lat(x)
+    for _ in range(C - K):
+        # paper Alg. 3 line 9: k* = argmax_k (Omega - Omega_k); all
+        # subcarriers are allocated even when the gain is zero.
+        cands = np.empty(K)
+        for k in range(K):
+            x[k] += 1
+            cands[k] = lat(x)
+            x[k] -= 1
+        best_k = int(np.argmin(cands))
+        x[best_k] += 1
+        cur = cands[best_k]
+    return x, cur
+
+
+def brute_force_spectrum(v, devices, net, ncfg, prof, B, L,
+                         C: Optional[int] = None):
+    """Exhaustive optimum for tiny instances (tests)."""
+    C = ncfg.n_subcarriers if C is None else C
+    K = len(devices)
+    best = (None, math.inf)
+
+    def rec(prefix, remaining, slots):
+        nonlocal best
+        if slots == 1:
+            x = np.array(prefix + [remaining])
+            lat = cluster_latency(v, devices, x, net, ncfg, prof, B, L)
+            if lat < best[1]:
+                best = (x, lat)
+            return
+        for c in range(1, remaining - (slots - 1) + 1):
+            rec(prefix + [c], remaining - c, slots - 1)
+
+    rec([], C, K)
+    return best
+
+
+# --------------------------------------------------------------------------
+# Alg. 4 — Gibbs-sampling joint clustering + spectrum allocation
+# --------------------------------------------------------------------------
+
+def _round_latency_cached(v, clusters, net, ncfg, prof, B, L, cache):
+    total = 0.0
+    xs = []
+    for ds in clusters:
+        key = tuple(sorted(ds))
+        if key not in cache:
+            cache[key] = greedy_spectrum(v, list(key), net, ncfg, prof, B, L)
+        x, lat = cache[key]
+        xs.append(x)
+        total += lat
+    return total, xs
+
+
+def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
+                     prof: CutProfile, B: int, L: int, n_clusters: int,
+                     cluster_size: int, iters: int = 1000,
+                     delta: float = 1e-4, seed: int = 0,
+                     track: bool = False):
+    """Alg. 4: random swap proposals accepted w.p. 1/(1+exp((new-old)/delta)).
+
+    Returns (clusters, xs, latency[, history])."""
+    N = len(net.f)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(N)
+    clusters = [list(order[m * cluster_size:(m + 1) * cluster_size])
+                for m in range(n_clusters)]
+    cache: dict = {}
+    cur, xs = _round_latency_cached(v, clusters, net, ncfg, prof, B, L, cache)
+    best = (cur, [list(c) for c in clusters], [x.copy() for x in xs])
+    hist = [cur]
+    for _ in range(iters):
+        m, mp = rng.choice(n_clusters, size=2, replace=False)
+        i = rng.integers(len(clusters[m]))
+        j = rng.integers(len(clusters[mp]))
+        cand = [list(c) for c in clusters]
+        cand[m][i], cand[mp][j] = cand[mp][j], cand[m][i]
+        new, new_xs = _round_latency_cached(v, cand, net, ncfg, prof, B, L,
+                                            cache)
+        eps = 1.0 / (1.0 + math.exp(min((new - cur) / max(delta, 1e-12),
+                                        700.0)))
+        if rng.random() < eps:
+            clusters, cur, xs = cand, new, new_xs
+        if cur < best[0]:
+            best = (cur, [list(c) for c in clusters], [x.copy() for x in xs])
+        if track:
+            hist.append(cur)
+    lat, cl, xs = best
+    if track:
+        return cl, xs, lat, hist
+    return cl, xs, lat
+
+
+def _uniform_xs(clusters, ncfg):
+    """Benchmark schemes don't optimize spectrum: equal split (paper's
+    baselines lack the joint spectrum allocation)."""
+    return [np.full(len(c), max(ncfg.n_subcarriers // len(c), 1))
+            for c in clusters]
+
+
+def heuristic_clustering(v, net, ncfg, prof, B, L, n_clusters, cluster_size,
+                         optimize_spectrum: bool = False):
+    """Benchmark: group devices with similar compute capability."""
+    from repro.core.latency import round_latency
+    order = np.argsort(net.f)
+    clusters = [list(order[m * cluster_size:(m + 1) * cluster_size])
+                for m in range(n_clusters)]
+    if optimize_spectrum:
+        lat, xs = _round_latency_cached(v, clusters, net, ncfg, prof, B, L,
+                                        {})
+    else:
+        xs = _uniform_xs(clusters, ncfg)
+        lat = round_latency(v, clusters, xs, net, ncfg, prof, B, L)
+    return clusters, xs, lat
+
+
+def random_clustering(v, net, ncfg, prof, B, L, n_clusters, cluster_size,
+                      seed=0, optimize_spectrum: bool = False):
+    from repro.core.latency import round_latency
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(net.f))
+    clusters = [list(order[m * cluster_size:(m + 1) * cluster_size])
+                for m in range(n_clusters)]
+    if optimize_spectrum:
+        lat, xs = _round_latency_cached(v, clusters, net, ncfg, prof, B, L,
+                                        {})
+    else:
+        xs = _uniform_xs(clusters, ncfg)
+        lat = round_latency(v, clusters, xs, net, ncfg, prof, B, L)
+    return clusters, xs, lat
+
+
+# --------------------------------------------------------------------------
+# Alg. 2 — SAA cut-layer selection
+# --------------------------------------------------------------------------
+
+def saa_cut_selection(prof: CutProfile, ncfg: NetworkCfg, B: int, L: int,
+                      n_clusters: int, cluster_size: int, n_samples: int = 8,
+                      gibbs_iters: int = 200, seed: int = 0,
+                      cuts: Optional[Sequence[int]] = None
+                      ) -> Tuple[int, np.ndarray]:
+    """Draw J network samples; for each cut layer v evaluate the mean
+    per-round latency under Alg. 4 decisions; return argmin and the
+    per-cut mean latencies."""
+    mu_f, mu_snr = device_means(ncfg, seed)
+    rng = np.random.default_rng(seed + 1)
+    nets = [sample_network(ncfg, mu_f, mu_snr, rng) for _ in range(n_samples)]
+    cuts = list(cuts) if cuts is not None else list(range(1, prof.n_cuts + 1))
+    means = np.zeros(len(cuts))
+    for ci, v in enumerate(cuts):
+        tot = 0.0
+        for j, net in enumerate(nets):
+            _, _, lat = gibbs_clustering(v, net, ncfg, prof, B, L,
+                                         n_clusters, cluster_size,
+                                         iters=gibbs_iters, seed=seed + j)
+            tot += lat
+        means[ci] = tot / n_samples
+    v_star = cuts[int(np.argmin(means))]
+    return v_star, means

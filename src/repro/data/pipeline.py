@@ -1,0 +1,71 @@
+"""Data pipeline: per-device local datasets -> CPSL cluster batches.
+
+``CPSLDataset`` owns the non-IID device shards and yields batches shaped
+(K, B, ...) for the active cluster — the mini-batch draw of paper eq. (4).
+On a real multi-host pod each host would materialize only its mesh-row's
+clients; ``host_slice`` carries that logic (exercised logically here).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class CPSLDataset:
+    def __init__(self, images: np.ndarray, labels: np.ndarray,
+                 device_indices: List[np.ndarray], batch: int,
+                 field_names=("image", "label"), seed: int = 0):
+        self.x, self.y = images, labels
+        self.device_indices = device_indices
+        self.B = batch
+        self.fields = field_names
+        self.rng = np.random.default_rng(seed)
+
+    def data_sizes(self, devices: Sequence[int]) -> np.ndarray:
+        return np.array([len(self.device_indices[d]) for d in devices],
+                        np.float32)
+
+    def cluster_batch(self, devices: Sequence[int],
+                      seed: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """Draw a (K, B, ...) batch: device k samples B items from its own
+        local dataset (paper: B_{m,k} subset of D_{m,k}). Passing ``seed``
+        makes the draw a pure function of (seed, devices) — required for
+        bit-exact restart-after-failure."""
+        rng = np.random.default_rng(seed) if seed is not None else self.rng
+        xs, ys = [], []
+        for d in devices:
+            idx = self.device_indices[d]
+            pick = rng.choice(idx, self.B, replace=len(idx) < self.B)
+            xs.append(self.x[pick])
+            ys.append(self.y[pick])
+        return {self.fields[0]: np.stack(xs), self.fields[1]: np.stack(ys)}
+
+
+class LMClusterData:
+    """Synthetic-LM equivalent: each simulated client has its own Markov
+    seed (non-IID across clients)."""
+
+    def __init__(self, lm, n_devices: int, batch: int, seq: int,
+                 seed: int = 0):
+        self.lm = lm
+        self.B, self.S = batch, seq
+        self.rngs = [np.random.default_rng(seed + 7 * d)
+                     for d in range(n_devices)]
+
+    def cluster_batch(self, devices: Sequence[int]):
+        parts = [self.lm.sample(self.B, self.S, self.rngs[d])
+                 for d in devices]
+        return {k: np.stack([p[k] for p in parts]) for k in parts[0]}
+
+
+def host_slice(batch: Dict[str, np.ndarray], host_id: int, n_hosts: int
+               ) -> Dict[str, np.ndarray]:
+    """Shard the client axis across hosts (multi-host data loading: each
+    host feeds only its addressable mesh rows)."""
+    def sl(t):
+        K = t.shape[0]
+        per = K // n_hosts
+        return t[host_id * per:(host_id + 1) * per]
+
+    return {k: sl(v) for k, v in batch.items()}

@@ -1,0 +1,131 @@
+"""Flash-attention Pallas TPU kernel.
+
+Online-softmax attention with explicit VMEM tiling:
+  grid = (BH, n_q_blocks, n_kv_blocks), kv innermost (sequential on TPU),
+  BlockSpecs stream (block_q x D) query tiles and (block_kv x D) key/value
+  tiles HBM->VMEM; running max/denominator/accumulator live in VMEM
+  scratch across the kv grid dimension. Causal blocks entirely above the
+  diagonal are skipped with pl.when (the dominant saving vs the chunked
+  jnp path, which masks instead of skipping).
+
+MXU alignment: block_q/block_kv default 128 (>= 8x128 tiles); D is the
+head dim (64..256 for the zoo archs) — the q k^T and p v matmuls hit the
+128x128 systolic array at full tile occupancy for D >= 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                 causal: bool, window: int, softcap: float, q_offset: int,
+                 block_q: int, block_kv: int, n_kv: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_lo = q_offset + qi * block_q
+    k_lo = ki * block_kv
+
+    def _visible():
+        # any (q, k) pair in this tile can be visible?
+        vis = True
+        if causal:
+            vis = jnp.asarray(q_lo + block_q - 1 >= k_lo)
+        if window > 0:
+            vis = jnp.logical_and(
+                vis, q_lo <= k_lo + block_kv - 1 + window - 1)
+        return vis
+
+    @pl.when(_visible() if (causal or window > 0) else True)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)          # (block_kv, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        if causal or window > 0:
+            qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+            kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+            ok = jnp.ones((block_q, block_kv), jnp.bool_)
+            if causal:
+                ok &= qpos >= kpos
+            if window > 0:
+                ok &= (qpos - kpos) < window
+            s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_sc[...]
+        l_prev = l_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * alpha + pv
+        m_sc[...] = m_new
+        l_sc[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_flat(q, k, v, *, causal: bool = True, window: int = 0,
+                         softcap: float = 0.0, q_offset: int = 0,
+                         block_q: int = 128, block_kv: int = 128,
+                         kv_repeat: int = 1, interpret: bool = False):
+    """q: (BHq, Sq, D); k, v: (BHkv, Skv, D) with BHq == BHkv * kv_repeat
+    (GQA: query head h reads kv head h // kv_repeat)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    while Sq % block_q:
+        block_q //= 2
+    while Skv % block_kv:
+        block_kv //= 2
+    n_q = Sq // block_q
+    n_kv = Skv // block_kv
+    grid = (BH, n_q, n_kv)
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_q=block_q, block_kv=block_kv, n_kv=n_kv,
+        scale=1.0 / math.sqrt(D))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_kv, D),
+                         lambda b, qi, ki, r=kv_repeat: (b // r, ki, 0)),
+            pl.BlockSpec((1, block_kv, D),
+                         lambda b, qi, ki, r=kv_repeat: (b // r, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D),
+                               lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+The kernel layout is flat-head:
+    q: (BH, Sq, D)  k, v: (BH, Skv, D)   (kv heads already expanded)
+Semantics: softmax(q k^T / sqrt(D) [+softcap] [+causal/window mask]) v,
+with absolute positions q_offset + i for queries.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, q_offset: int = 0) -> jnp.ndarray:
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

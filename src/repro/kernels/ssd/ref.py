@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the SSD kernel (flat per-head layout).
+
+    x: (BH, S, P)  dt: (BH, S)  A: (BH,)  Bm, Cm: (BH, S, N)
+Semantics: h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T ; y_t = C_t h_t.
+``ssd_scan_ref`` is the exact sequential recurrence; ``ssd_chunked_ref``
+is the block decomposition the kernel implements.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        a = jnp.exp(dt_t.astype(jnp.float32) * A)              # (BH,)
+        u = jnp.einsum("bn,bp,b->bnp", B_t.astype(jnp.float32),
+                       x_t.astype(jnp.float32), dt_t.astype(jnp.float32))
+        h = a[:, None, None] * h + u
+        y = jnp.einsum("bn,bnp->bp", C_t.astype(jnp.float32), h)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, Bm, Cm))
+    hT, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hT
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, chunk: int = 64):
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    f32 = jnp.float32
+    xc = x.reshape(BH, nc, Q, P).astype(f32)
+    dtc = dt.reshape(BH, nc, Q).astype(f32)
+    Bc = Bm.reshape(BH, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(BH, nc, Q, N).astype(f32)
+
+    dA = dtc * A[:, None, None]
+    cum = jnp.cumsum(dA, axis=2)
+    scores = jnp.einsum("bnqd,bnkd->bnqk", Cc, Bc)
+    decay = jnp.exp(cum[..., :, None] - cum[..., None, :])
+    decay = jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), decay, 0.0)
+    M = scores * decay * dtc[..., None, :]
+    y_diag = jnp.einsum("bnqk,bnkp->bnqp", M, xc)
+
+    sdecay = jnp.exp(cum[:, :, -1:] - cum)
+    Sc = jnp.einsum("bnqd,bnq,bnqp->bndp", Bc, sdecay * dtc, xc)
+    tot = jnp.exp(cum[:, :, -1])
+
+    def step(h, inp):
+        Sc_c, tot_c = inp
+        return tot_c[:, None, None] * h + Sc_c, h
+
+    hT, h_prevs = lax.scan(step, jnp.zeros((BH, N, P), f32),
+                           (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(tot, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)
+    y_off = jnp.einsum("bnqd,bndp,bnq->bnqp", Cc, h_prevs, jnp.exp(cum))
+    return (y_diag + y_off).reshape(BH, S, P).astype(x.dtype), hT

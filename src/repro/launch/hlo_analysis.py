@@ -1,0 +1,283 @@
+"""Post-SPMD HLO analysis for the roofline.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, but our
+layer stacks compile to while loops (lax.scan), so we parse
+``compiled.as_text()`` ourselves and propagate loop trip counts:
+
+  - collective bytes: all-gather / all-reduce(x2: reduce+broadcast phases)
+    / reduce-scatter / all-to-all / collective-permute result bytes,
+  - dot FLOPs: 2 * prod(result dims) * prod(lhs contracting dims),
+  - HBM traffic proxy: operand+result bytes of top-level (fusion-boundary)
+    instructions — fusion boundaries are where tensors round-trip HBM.
+
+Trip counts come from each while condition's compare(_, constant(N));
+call-graph edges: while bodies (xN), calls/conditionals (x1). Instructions
+inside fusion bodies are not double-counted for memory.
+
+All numbers are PER-DEVICE (the HLO is the partitioned per-device module).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<rtype>.+?)\s"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$")
+# computation headers sit at column 0: `%name (params...) -> type {`
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",")] if dim_str else []
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(m.group(2)):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.rstrip() == "}":
+            cur = None
+        else:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"\s*%?([\w.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" in ln:
+            args = re.search(r"compare\(([^)]*)\)", ln)
+            if not args:
+                continue
+            for a in args.group(1).split(","):
+                name = a.strip().split(" ")[-1].lstrip("%")
+                if name in consts:
+                    return consts[name]
+    # compare is often wrapped in a fusion: the loop bound is the scalar
+    # constant in the condition computation (there is exactly one).
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+
+
+def _operand_names(args: str) -> List[str]:
+    """Operand instruction names from the args portion (up to the closing
+    paren of the operand list)."""
+    depth = 1
+    out = []
+    cur = ""
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur += ch
+    for tok in cur.split(","):
+        tok = tok.strip()
+        m = re.search(r"%([\w.\-]+)\s*$", tok)
+        if m:
+            out.append(m.group(1))
+    return out
+
+
+def _dot_flops(rtype: str, args: str, line: str, symtab: Dict[str, str]
+               ) -> float:
+    rm = _SHAPE_RE.search(rtype)
+    if not rm:
+        return 0.0
+    n = 1
+    for d in _dims(rm.group(2)):
+        n *= d
+    ops = _operand_names(args)
+    lhs_dims: List[int] = []
+    if ops and ops[0] in symtab:
+        lm = _SHAPE_RE.search(symtab[ops[0]])
+        if lm:
+            lhs_dims = _dims(lm.group(2))
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    k = 1
+    if cm and cm.group(1):
+        for ci in _dims(cm.group(1)):
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * n * k
+
+
+def _conv_flops(rtype: str, args: str, line: str, symtab: Dict[str, str]
+                ) -> float:
+    rm = _SHAPE_RE.search(rtype)
+    if not rm:
+        return 0.0
+    n = 1
+    for d in _dims(rm.group(2)):
+        n *= d
+    ops = _operand_names(args)
+    kdims: List[int] = []
+    if len(ops) > 1 and ops[1] in symtab:
+        km = _SHAPE_RE.search(symtab[ops[1]])
+        if km:
+            kdims = _dims(km.group(2))
+    kprod = 1
+    for d in kdims:
+        kprod *= d
+    dm = re.search(r"dim_labels=\S*_(\S*?)->", line)
+    out_feat = max(kdims) if kdims else 1
+    if dm:
+        lbl = dm.group(1)
+        if "o" in lbl and lbl.index("o") < len(kdims):
+            out_feat = kdims[lbl.index("o")]
+    return 2.0 * n * kprod / max(out_feat, 1)
+
+
+class HLOStats:
+    def __init__(self):
+        self.flops = 0.0
+        self.hbm_bytes = 0.0
+        self.coll = defaultdict(float)
+
+    @property
+    def collective_bytes(self):
+        return sum(self.coll.values())
+
+
+def analyze(hlo: str) -> HLOStats:
+    comps = _split_computations(hlo)
+    em = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    entry = em.group(1) if em else next(iter(comps))
+
+    # per-computation locals
+    loc_flops: Dict[str, float] = defaultdict(float)
+    loc_bytes: Dict[str, float] = defaultdict(float)
+    loc_coll: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: defaultdict(float))
+    edges: Dict[str, List[Tuple[str, float, str]]] = defaultdict(list)
+
+    # HBM-traffic ops: fusion boundaries + data movement. Standalone
+    # elementwise ops (convert/add/exp/...) are EXCLUDED — on the TPU
+    # target they fuse into neighbors; the CPU backend leaves them
+    # unfused, which would wildly over-count the target's HBM traffic.
+    _MEM_OPS = {"fusion", "dot", "convolution", "copy", "concatenate",
+                "dynamic-update-slice", "dynamic-slice", "slice",
+                "scatter", "gather", "sort", "pad", "reduce",
+                "reduce-window", "select-and-scatter", "transpose",
+                "custom-call", "cholesky", "triangular-solve"}
+
+    for name, lines in comps.items():
+        # symbol table: instruction name -> result type string
+        symtab: Dict[str, str] = {}
+        for ln in lines:
+            nm = _NAME_RE.match(ln)
+            im = _INSTR_RE.match(ln)
+            if nm and im:
+                symtab[nm.group(1)] = im.group("rtype")
+
+        def op_bytes(args):
+            return sum(_shape_bytes(symtab.get(o, ""))
+                       for o in _operand_names(args))
+
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            op = im.group("op")
+            rtype = im.group("rtype")
+            args = im.group("args")
+            if op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                if bm and cm:
+                    trips = _trip_count(comps.get(cm.group(1), []))
+                    edges[name].append((bm.group(1), float(trips), "while"))
+                continue
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                b = _shape_bytes(rtype)
+                if base == "all-reduce":
+                    b *= 2
+                loc_coll[name][base] += b
+                loc_bytes[name] += _shape_bytes(rtype) + op_bytes(args)
+                continue
+            if op in ("fusion",):
+                fm = re.search(r"calls=%?([\w.\-]+)", ln)
+                if fm and fm.group(1) in comps:
+                    edges[name].append((fm.group(1), 1.0, "fusion"))
+            if op in ("call", "conditional"):
+                for cm2 in re.finditer(r"(?:to_apply=|calls=|branch_computations=\{)"
+                                       r"%?([\w.\-]+)", ln):
+                    if cm2.group(1) in comps:
+                        edges[name].append((cm2.group(1), 1.0, "call"))
+            if op == "dot":
+                loc_flops[name] += _dot_flops(rtype, args, ln, symtab)
+            elif op == "convolution":
+                loc_flops[name] += _conv_flops(rtype, args, ln, symtab)
+            if op in _MEM_OPS:
+                loc_bytes[name] += _shape_bytes(rtype) + op_bytes(args)
+
+    stats = HLOStats()
+    stack = []
+
+    def visit(comp: str, mult: float, via_fusion: bool):
+        if comp in stack:
+            return
+        stack.append(comp)
+        stats.flops += loc_flops.get(comp, 0.0) * mult
+        if not via_fusion:
+            stats.hbm_bytes += loc_bytes.get(comp, 0.0) * mult
+        for kind, b in loc_coll.get(comp, {}).items():
+            stats.coll[kind] += b * mult
+        for callee, m, ek in edges.get(comp, []):
+            visit(callee, mult * m, via_fusion or ek == "fusion")
+        stack.pop()
+
+    visit(entry, 1.0, False)
+    return stats
+
+
+def report(hlo: str) -> dict:
+    s = analyze(hlo)
+    return {
+        "parsed_flops_per_device": s.flops,
+        "parsed_hbm_bytes_per_device": s.hbm_bytes,
+        "collective_bytes_per_device": s.collective_bytes,
+        "collectives_by_kind": {k: int(v) for k, v in s.coll.items()},
+    }

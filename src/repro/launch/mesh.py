@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+
+Single pod:  (data=16, model=16)            = 256 chips (v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+The 'pod' axis extends client/data parallelism across the DCN/ICI pod
+boundary; 'model' is the intra-pod TP axis (fastest ICI links).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pods: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    n = len(jax.devices())
+    assert pods * data * model <= n, (pods, data, model, n)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline):
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link

@@ -1,0 +1,820 @@
+"""Common pure-JAX model components: norms, rope, attention (GQA/MLA,
+naive/chunked flash-equivalent), MLPs, GShard-style MoE.
+
+Everything is functional: ``*_init(key, ...) -> params`` (nested dicts of
+f32 arrays) and ``*_apply(params, x, ...) -> y``. Compute runs in the
+config's compute dtype (bf16 by default); softmax statistics in f32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, MoECfg, MLACfg
+from repro.core import partitioning as pt
+
+Params = dict
+
+NEG_INF = -1e30
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype=jnp.float32) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6,
+               gemma_style: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(var + eps)
+        scale = p["scale"].astype(jnp.float32)
+        # gemma parameterizes the scale as (1 + w)
+        y = y * (1.0 + scale) if gemma_style else y * scale
+    else:  # layernorm
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings (NeoX half-rotation convention)
+# --------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (S,) or broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]             # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention cores (grouped-query layout throughout)
+#   q: (B, Sq, G, R, D)   k, v: (B, Skv, G, D)
+# where G = n_kv_heads, R = n_heads // n_kv_heads.
+# --------------------------------------------------------------------------
+
+def _soft_cap(s: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(s / cap) if cap > 0 else s
+
+
+def _mask_bias(qpos, kpos, *, causal: bool, window: int,
+               kv_valid_len=None) -> jnp.ndarray:
+    """Additive f32 bias (..., Sq, Skv) — 0 where allowed, NEG_INF elsewhere."""
+    ok = jnp.ones((qpos.shape[-1], kpos.shape[-1]), jnp.bool_)
+    dq = qpos[:, None]
+    dk = kpos[None, :]
+    if causal:
+        ok &= dq >= dk
+    if window > 0:
+        ok &= (dq - dk) < window
+    if kv_valid_len is not None:
+        ok &= dk < kv_valid_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    softcap: float = 0.0, q_offset=0,
+                    kv_valid_len=None) -> jnp.ndarray:
+    """Reference full-materialization attention. Grouped layout."""
+    B, Sq, G, R, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _soft_cap(s, softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    s = s + _mask_bias(qpos, kpos, causal=causal, window=window,
+                       kv_valid_len=kv_valid_len)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def _largest_divisor(n: int, target: int) -> int:
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _flash_fwd_impl(q, k, v, causal, window, softcap, q_offset, q_chunk,
+                    kv_chunk):
+    """Online-softmax forward. Returns (out, lse) with lse: (B,G,R,Sq)."""
+    B, Sq, G, R, D = q.shape
+    Skv = k.shape[1]
+    q_chunk = _largest_divisor(Sq, q_chunk)
+    kv_chunk = _largest_divisor(Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, nq, q_chunk, G, R, D)
+
+    def q_step(_, inputs):
+        qi, qc = inputs                                  # qc: (B, qcw, G, R, D)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        m0 = jnp.full((B, G, R, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, G, R, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, G, R, D), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vc = lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            s = _soft_cap(s, softcap)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = s + _mask_bias(qpos, kpos, causal=causal, window=window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bqgrd", p, vc.astype(jnp.float32))
+            acc_new = acc * jnp.moveaxis(alpha, 3, 1)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        l = jnp.maximum(l, 1e-30)
+        lse = m + jnp.log(l)
+        out_c = (acc / jnp.moveaxis(l, 3, 1)[..., None]).astype(q.dtype)
+        return None, (out_c, lse)
+
+    _, (out, lse) = lax.scan(q_step, None,
+                             (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, G, R, D)
+    lse = jnp.moveaxis(lse, 0, 3).reshape(B, G, R, Sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def chunked_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                      q_offset=0, q_chunk=512, kv_chunk=1024) -> jnp.ndarray:
+    """Flash attention in pure jnp with a FLASH BACKWARD (custom_vjp).
+
+    Plain AD through the chunk scans would stash the (q_chunk, kv_chunk)
+    probability tiles for every iteration — O(Sq*Skv) residuals, the exact
+    memory blow-up flash attention exists to avoid. Instead we save only
+    (out, lse) and recompute each tile in the backward, the standard
+    flash-attention gradient. This is also the exact math of the Pallas
+    kernel (kernels/flash_attention) and serves as its oracle.
+    """
+    return _flash_fwd_impl(q, k, v, causal, window, softcap, q_offset,
+                           q_chunk, kv_chunk)[0]
+
+
+def _flash_fwd_rule(q, k, v, causal, window, softcap, q_offset, q_chunk,
+                    kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, softcap, q_offset,
+                               q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, softcap, q_offset, q_chunk, kv_chunk,
+                    res, g):
+    q, k, v, out, lse = res
+    B, Sq, G, R, D = q.shape
+    Skv = k.shape[1]
+    q_chunk = _largest_divisor(Sq, q_chunk)
+    kv_chunk = _largest_divisor(Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / math.sqrt(D)
+    f32 = jnp.float32
+    # delta_i = sum_d dO_i * O_i   (B,G,R,Sq)
+    delta = jnp.einsum("bqgrd,bqgrd->bgrq", g.astype(f32), out.astype(f32))
+    qr = jnp.moveaxis(q.reshape(B, nq, q_chunk, G, R, D), 1, 0)
+    gr = jnp.moveaxis(g.reshape(B, nq, q_chunk, G, R, D), 1, 0)
+    lser = jnp.moveaxis(lse.reshape(B, G, R, nq, q_chunk), 3, 0)
+    deltar = jnp.moveaxis(delta.reshape(B, G, R, nq, q_chunk), 3, 0)
+
+    def q_step(carry, inputs):
+        dk, dv = carry
+        qi, qc, gc, lse_c, delta_c = inputs
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(inner, ki):
+            dk, dv, dq_c = inner
+            kc = lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vc = lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            s_pre = jnp.einsum("bqgrd,bkgd->bgrqk", qc.astype(f32),
+                               kc.astype(f32)) * scale
+            s = _soft_cap(s_pre, softcap)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            bias = _mask_bias(qpos, kpos, causal=causal, window=window)
+            p = jnp.exp(s + bias - lse_c[..., None])     # exact softmax tile
+            dp = jnp.einsum("bqgrd,bkgd->bgrqk", gc.astype(f32),
+                            vc.astype(f32))
+            ds = p * (dp - delta_c[..., None])
+            if softcap > 0:
+                ds = ds * (1.0 - jnp.square(jnp.tanh(s_pre / softcap)))
+            dq_c = dq_c + jnp.einsum("bgrqk,bkgd->bqgrd", ds,
+                                     kc.astype(f32)) * scale
+            dk_c = jnp.einsum("bgrqk,bqgrd->bkgd", ds,
+                              qc.astype(f32)) * scale
+            dv_c = jnp.einsum("bgrqk,bqgrd->bkgd", p, gc.astype(f32))
+            dk = lax.dynamic_update_slice_in_dim(
+                dk, lax.dynamic_slice_in_dim(dk, ki * kv_chunk, kv_chunk, 1)
+                + dk_c, ki * kv_chunk, 1)
+            dv = lax.dynamic_update_slice_in_dim(
+                dv, lax.dynamic_slice_in_dim(dv, ki * kv_chunk, kv_chunk, 1)
+                + dv_c, ki * kv_chunk, 1)
+            return (dk, dv, dq_c), None
+
+        dq0 = jnp.zeros((B, q_chunk, G, R, D), f32)
+        (dk, dv, dq_c), _ = lax.scan(kv_step, (dk, dv, dq0),
+                                     jnp.arange(nk))
+        return (dk, dv), dq_c
+
+    dk0 = jnp.zeros((B, Skv, G, D), f32)
+    dv0 = jnp.zeros((B, Skv, G, D), f32)
+    (dk, dv), dq = lax.scan(q_step, (dk0, dv0),
+                            (jnp.arange(nq), qr, gr, lser, deltar))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, Sq, G, R, D)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+chunked_attention.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def shard_grouped_qkv(q, k, v):
+    """TP layout for the attention core: shard heads over 'model' where
+    divisible (kv-head group G first, else per-group R), otherwise fall
+    back to batch-only sharding — replicating heads beats contracting over
+    a sharded head_dim (which all-reduces every score tile)."""
+    hs = pt.axis_size("heads")
+    G, R = q.shape[2], q.shape[3]
+    if hs > 1 and G % hs == 0:
+        q = pt.shard(q, "batch", None, "heads", None, None)
+        k = pt.shard(k, "batch", None, "heads", None)
+        v = pt.shard(v, "batch", None, "heads", None)
+    elif hs > 1 and R % hs == 0:
+        q = pt.shard(q, "batch", None, None, "heads", None)
+        k = pt.shard(k, "batch", None, None, None)
+        v = pt.shard(v, "batch", None, None, None)
+    else:
+        # heads don't divide the TP axis (e.g. 14 heads on 16-way TP):
+        # replicate heads across TP, shard batch only. Wastes TP-axis
+        # compute on attention; see EXPERIMENTS.md §Perf for the
+        # head-padding iteration.
+        q = pt.shard(q, "batch", None, None, None, None)
+        k = pt.shard(k, "batch", None, None, None)
+        v = pt.shard(v, "batch", None, None, None)
+    return q, k, v
+
+
+def grouped_attention(q, k, v, cfg: ModelConfig, *, causal: bool,
+                      window: int = 0, q_offset=0, kv_valid_len=None,
+                      impl: Optional[str] = None) -> jnp.ndarray:
+    impl = impl or cfg.attn_impl
+    if kv_valid_len is None and q.shape[1] > 1:
+        # full-seq self/cross attention: TP over heads. Decode paths keep
+        # the cache's (batch, kv_seq) layout — resharding a 32k cache
+        # every step would dwarf the step itself.
+        q, k, v = shard_grouped_qkv(q, k, v)
+    # chunked/pallas need static q_offset (custom_vjp nondiff arg); traced
+    # offsets only occur on decode/cache paths, which use naive anyway.
+    fast_ok = (kv_valid_len is None and q.shape[1] > 1
+               and isinstance(q_offset, int))
+    if impl == "chunked" and fast_ok:
+        return chunked_attention(q, k, v, causal, window, cfg.attn_softcap,
+                                 q_offset, cfg.q_chunk, cfg.kv_chunk)
+    if impl == "pallas" and fast_ok:
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal, window,
+                                      cfg.attn_softcap, q_offset)
+    return naive_attention(q, k, v, causal=causal, window=window,
+                           softcap=cfg.attn_softcap, q_offset=q_offset,
+                           kv_valid_len=kv_valid_len)
+
+
+# --------------------------------------------------------------------------
+# GQA attention module
+# --------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, G = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wk": dense_init(ks[1], d, G * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wv": dense_init(ks[2], d, G * hd, bias=cfg.qkv_bias, dtype=dt),
+        "wo": dense_init(ks[3], H * hd, d, dtype=dt,
+                         scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd, "rmsnorm", dt)
+        p["k_norm"] = norm_init(hd, "rmsnorm", dt)
+    return p
+
+
+def gqa_project_kv(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   positions: jnp.ndarray, *, use_rope: bool = True):
+    """Project and rope k/v for caching. x: (B, S, D) -> k, v: (B, S, G, hd)."""
+    B, S, _ = x.shape
+    hd, G = cfg.resolved_head_dim, cfg.n_kv_heads
+    k = dense(p["wk"], x).reshape(B, S, G, hd)
+    v = dense(p["wv"], x).reshape(B, S, G, hd)
+    if cfg.qk_norm:
+        k = apply_norm(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    if use_rope:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def gqa_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+              causal: bool = True, window: int = 0,
+              positions: Optional[jnp.ndarray] = None,
+              kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              kv_valid_len=None, use_rope: bool = True,
+              impl: Optional[str] = None) -> jnp.ndarray:
+    """Self- or cross-attention. If ``kv`` is given it is the (already
+    roped/projected) key/value source (cache or encoder memory)."""
+    B, S, _ = x.shape
+    hd, H, G = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    R = H // G
+    if positions is None:
+        positions = jnp.arange(S)
+    q = dense(p["wq"], x).reshape(B, S, G, R, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q.reshape(B, S, G * R, hd), positions,
+                       cfg.rope_theta).reshape(B, S, G, R, hd)
+    if kv is None:
+        k, v = gqa_project_kv(p, x, cfg, positions, use_rope=use_rope)
+        q_offset = 0
+    else:
+        k, v = kv
+        # only causal/window masking consults absolute positions
+        q_offset = (positions[0] if (causal or window > 0)
+                    and positions.ndim == 1 else 0)
+    # TP layout fix-up: when neither G nor R divides the TP axis but H
+    # does (qwen3: G=8, R=8, tp=16), flatten to per-head layout (G'=H,
+    # R'=1, kv broadcast) so heads shard cleanly. Per-device repeated-kv
+    # is S*(H/tp)*hd — no bigger than the unsharded grouped kv.
+    hs = pt.axis_size("heads")
+    if (kv is None and S > 1 and hs > 1 and G % hs and R % hs
+            and (G * R) % hs == 0):
+        k = jnp.repeat(k, R, axis=2)
+        v = jnp.repeat(v, R, axis=2)
+        q = q.reshape(B, S, G * R, 1, hd)
+    o = grouped_attention(q, k, v, cfg, causal=causal, window=window,
+                          q_offset=q_offset, kv_valid_len=kv_valid_len,
+                          impl=impl)
+    return dense(p["wo"], o.reshape(B, S, H * hd))
+
+
+# --------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    m: MLACfg = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    qdim = H * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+    p = {
+        # q projection (V2-Lite: full rank)
+        "wq": dense_init(ks[0], d, qdim, dtype=dt),
+        # compressed kv latent + decoupled rope key
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dt),
+        "kv_norm": norm_init(m.kv_lora_rank, "rmsnorm", dt),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype=dt),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, H * m.v_head_dim, dtype=dt),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dtype=dt),
+    }
+    return p
+
+
+def mla_project_latent(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                       positions: jnp.ndarray):
+    """Compute the cacheable latent: c_kv (B,S,r) and roped k_rope (B,S,dr)."""
+    m: MLACfg = cfg.mla
+    ckv_kr = dense(p["w_dkv"], x)
+    c_kv, k_rope = jnp.split(ckv_kr, [m.kv_lora_rank], axis=-1)
+    c_kv = apply_norm(p["kv_norm"], c_kv, "rmsnorm", cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+              causal: bool = True, positions: Optional[jnp.ndarray] = None,
+              latent: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              kv_valid_len=None, absorbed: bool = False) -> jnp.ndarray:
+    """MLA attention. ``latent`` is the (c_kv, k_rope) cache for decode.
+
+    absorbed=True runs attention in the compressed latent space (W_UK folded
+    into the query, W_UV folded into the output) — the memory-optimal decode
+    path; scores/values touch only rank-r tensors.
+    """
+    m: MLACfg = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                     m.v_head_dim, m.kv_lora_rank)
+    if positions is None:
+        positions = jnp.arange(S)
+    q = dense(p["wq"], x).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = jnp.split(q, [dn], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    if latent is None:
+        c_kv, k_rope = mla_project_latent(p, x, cfg, positions)
+        q_offset = 0
+    else:
+        c_kv, k_rope = latent
+        q_offset = positions[0] if positions.ndim == 1 else 0
+    Skv = c_kv.shape[1]
+
+    if absorbed:
+        # fold W_UK into q: q_lat (B,S,H,r); attend over latent directly.
+        w_uk = p["w_uk"]["w"].reshape(r, H, dn).astype(q_nope.dtype)
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+        qq = jnp.concatenate([q_lat, q_rope], axis=-1)     # (B,S,H,r+dr)
+        kk = jnp.concatenate([c_kv, k_rope], axis=-1)      # (B,Skv,r+dr)
+        # grouped layout with G=1 kv head of width r+dr, value = c_kv (r)
+        qq = qq.reshape(B, S, 1, H, r + dr) / math.sqrt((dn + dr) / (r + dr))
+        qq = pt.shard(qq, "batch", None, None, "heads", None)
+        kk = kk[:, :, None, :]
+        vv = c_kv[:, :, None, :]
+        o_lat = naive_attention(qq, kk, vv, causal=causal, q_offset=q_offset,
+                                kv_valid_len=kv_valid_len)  # (B,S,1,H,r)
+        w_uv = p["w_uv"]["w"].reshape(r, H, dv).astype(x.dtype)
+        o = jnp.einsum("bshr,rhd->bshd", o_lat[:, :, 0], w_uv)
+    else:
+        k_nope = dense(p["w_uk"], c_kv).reshape(B, Skv, H, dn)
+        v = dense(p["w_uv"], c_kv).reshape(B, Skv, H, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, Skv, H, dr))],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # full multi-head (G=H, R=1); pad v to qk width for the shared core
+        o = grouped_attention(qq.reshape(B, S, H, 1, dn + dr), k,
+                              jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                          (0, dn + dr - dv))),
+                              cfg, causal=causal, q_offset=q_offset,
+                              kv_valid_len=kv_valid_len)
+        o = o.reshape(B, S, H, dn + dr)[..., :dv]
+    return dense(p["wo"], o.reshape(B, S, H * dv))
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def mlp_init(key, d: int, d_ff: int, cfg: ModelConfig, *,
+             bias: bool = False) -> Params:
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, d_ff, bias=bias, dtype=dt),
+         "w_down": dense_init(ks[1], d_ff, d, bias=bias, dtype=dt)}
+    if cfg.glu:
+        p["w_gate"] = dense_init(ks[2], d, d_ff, bias=bias, dtype=dt)
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    up = dense(p["w_up"], x)
+    if cfg.glu:
+        h = _act(dense(p["w_gate"], x), cfg.act) * up
+    else:
+        h = _act(up, cfg.act)
+    return dense(p["w_down"], h)
+
+
+# --------------------------------------------------------------------------
+# GShard-style MoE with grouped dense dispatch
+# --------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    m: MoECfg = cfg.moe
+    d, dff, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    s_in, s_ff = 1.0 / math.sqrt(d), 1.0 / math.sqrt(dff)
+    p = {
+        "router": _normal(ks[0], (d, E), s_in, jnp.float32),
+        "w_gate": _normal(ks[1], (E, d, dff), s_in, dt),
+        "w_up": _normal(ks[2], (E, d, dff), s_in, dt),
+        "w_down": _normal(ks[3], (E, dff, d), s_ff, dt),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, dff * m.n_shared_experts, cfg)
+    return p
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+              no_drop: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss). Grouped dense dispatch:
+
+    tokens are split into groups of ``group_size``; each group routes its
+    tokens into (E, C) capacity slots via one-hot dispatch/combine einsums
+    (SPMD-friendly: no scatter, lowers to all-to-all-class collectives when
+    the expert axis is sharded). Overflow tokens are dropped (capacity
+    factor 1.25), matching GShard/Switch semantics.
+    """
+    m: MoECfg = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    T = B * S
+    g = _largest_divisor(T, m.group_size)
+    n = T // g
+    xg = x.reshape(n, g, D)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])          # (n, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = lax.top_k(probs, k)                   # (n, g, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # capacity per expert per group; serving paths (no_drop) size the
+    # buffers so no token can ever overflow
+    C = g * k if no_drop else int(math.ceil(g * k / E * m.capacity_factor))
+    # position of each (token, choice) within its expert, in token order
+    oh = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)      # (n, g, k, E)
+    tok_e = oh.sum(2)                                        # (n, g, E)
+    pos_base = jnp.cumsum(tok_e, axis=1) - tok_e             # tokens before t
+    within = jnp.cumsum(oh, axis=2) - oh                     # earlier choices
+    pos = (pos_base[:, :, None, :] + within) * oh            # (n, g, k, E)
+    pos = pos.sum(-1)                                        # (n, g, k)
+    keep = (pos < C).astype(jnp.float32)
+    pos = pos.astype(jnp.int32)
+
+    # dispatch/combine tensors (n, g, E, C)
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)       # (n, g, k, C)
+    disp = jnp.einsum("ngke,ngkc->ngec", oh, pos_oh * keep[..., None])
+    comb = jnp.einsum("ngke,ngkc->ngec", oh * gate_w[..., None],
+                      pos_oh * keep[..., None])
+
+    xe = jnp.einsum("ngec,ngd->necd", disp.astype(x.dtype), xg)  # (n,E,C,D)
+    # NOTE (measured, see EXPERIMENTS.md §Perf): forcing the dispatch
+    # output onto an expert-parallel layout here (shard xe over 'expert')
+    # REGRESSED every MoE cell — the token-group dim loses its batch
+    # sharding and the full dispatch buffer replicates. XLA's choice
+    # (all-gather the 2D-sharded expert bank per layer) is cheaper at
+    # these expert sizes; kept as the baseline.
+    h = _act(jnp.einsum("necd,edf->necf", xe, p["w_gate"].astype(x.dtype)),
+             cfg.act)
+    h = h * jnp.einsum("necd,edf->necf", xe, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("ngec,necd->ngd", comb.astype(x.dtype), ye)
+
+    # load-balancing aux loss (Switch): E * mean_e(f_e * p_e)
+    f_e = tok_e.mean(axis=(0, 1)) / k                        # fraction routed
+    p_e = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e) * m.router_aux_weight
+
+    y = y.reshape(B, S, D)
+    if m.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y, aux
+
+
+def moe_apply_naive(p: Params, x: jnp.ndarray, cfg: ModelConfig
+                    ) -> jnp.ndarray:
+    """Oracle: per-token dense evaluation of all experts (no capacity drops).
+
+    Used only in tests on tiny shapes to validate the dispatch path.
+    """
+    m: MoECfg = cfg.moe
+    B, S, D = x.shape
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = lax.top_k(probs, m.top_k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    h = _act(jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(x.dtype)),
+             cfg.act)
+    h = h * jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("bsef,efd->bsed", h, p["w_down"].astype(x.dtype))
+    sel = jax.nn.one_hot(gate_idx, m.n_experts, dtype=jnp.float32)
+    w = jnp.einsum("bske,bsk->bse", sel, gate_w).astype(x.dtype)
+    y = jnp.einsum("bse,bsed->bsd", w, ye)
+    if m.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y
+
+
+# --------------------------------------------------------------------------
+# embeddings / heads
+# --------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig) -> Params:
+    dt = pdtype(cfg)
+    p = {"tok": _normal(key, (cfg.vocab_size, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = _normal(jax.random.fold_in(key, 1),
+                            (cfg.d_model, cfg.vocab_size),
+                            1.0 / math.sqrt(cfg.d_model), dt)
+    return p
+
+
+def embed_apply(p: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = p["tok"].astype(cdtype(cfg))[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def logits_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"].astype(x.dtype).T
+    else:
+        logits = x @ p["head"].astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = _soft_cap(logits, cfg.final_softcap)
+    return logits
+
+
+def lm_head_loss(head_w: jnp.ndarray, x: jnp.ndarray, labels: jnp.ndarray,
+                 cfg: ModelConfig, mask: Optional[jnp.ndarray] = None
+                 ) -> jnp.ndarray:
+    """Cross-entropy from final hiddens WITHOUT materializing the full
+    (tokens, vocab) logits when cfg.loss_chunk > 0: scan over token chunks
+    with remat so peak memory is one chunk's logits. head_w: (D, V).
+
+    At production shapes the full logits tensor is the memory monster
+    (train_4k x 152k vocab = 0.6 TB global); chunking is the standard
+    fused-CE production fix.
+    """
+    D = x.shape[-1]
+    B, S = labels.shape[:2] if labels.ndim == 2 else (1, labels.shape[0])
+    x = x.reshape(B, S, D)
+    labels = labels.reshape(B, S)
+    mask = mask.reshape(B, S) if mask is not None else None
+    chunk = cfg.loss_chunk
+    if chunk <= 0 or S % max(chunk, 1) or S <= chunk:
+        logits = (x @ head_w.astype(x.dtype)).astype(jnp.float32)
+        if cfg.final_softcap > 0:
+            logits = _soft_cap(logits, cfg.final_softcap)
+        logits = pt.shard(logits, "batch", None, "vocab")
+        return cross_entropy(logits, labels, mask)
+    # chunk along SEQ (keeps the (batch->data) sharding of every chunk)
+    n = S // chunk
+    mask = mask if mask is not None else jnp.ones((B, S), jnp.float32)
+    return _fused_ce(x, head_w, labels, mask, n,
+                     float(cfg.final_softcap))
+
+
+def _ce_chunk_stats(xc, head_w, lc, softcap):
+    # CE-local layout: batch over 'data' only, vocab over 'model' — keeps
+    # logits AND the dW contraction vocab-sharded even under the fsdp
+    # profile (where 'model' otherwise belongs to the batch).
+    xc = pt.shard(xc, "ce_batch", None, None)
+    logits = (xc @ head_w.astype(xc.dtype)).astype(jnp.float32)
+    raw = logits
+    if softcap > 0:
+        logits = _soft_cap(logits, softcap)
+    logits = pt.shard(logits, "ce_batch", None, "ce_vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+    return logits, raw, lse, ll
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _fused_ce(x, head_w, labels, mask, n, softcap):
+    """Fused chunked cross-entropy with a HAND-WRITTEN backward.
+
+    AD through the chunk scan would (a) carry a full replicated f32
+    (D, V) head-gradient accumulator and (b) all-gather the head per
+    chunk. The custom backward recomputes each chunk's softmax, forms
+    dlogits = p - onehot, and accumulates dW with an explicit
+    (None, vocab) sharding constraint — dW stays vocab-sharded.
+    """
+    return _fused_ce_fwd(x, head_w, labels, mask, n, softcap)[0]
+
+
+def _fused_ce_fwd(x, head_w, labels, mask, n, softcap):
+    B, S, D = x.shape
+    chunk = S // n
+    xr = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    mr = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0).astype(jnp.float32)
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        _, _, lse, ll = _ce_chunk_stats(xc, head_w, lc, softcap)
+        return (carry[0] + ((lse - ll) * mc).sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = lax.scan(jax.checkpoint(body),
+                             (jnp.zeros(()), jnp.zeros(())), (xr, lr, mr))
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt, (x, head_w, labels, mask, cnt)
+
+
+def _fused_ce_bwd(n, softcap, res, g):
+    x, head_w, labels, mask, cnt = res
+    B, S, D = x.shape
+    V = head_w.shape[1]
+    chunk = S // n
+    xr = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    mr = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0).astype(jnp.float32)
+    scale = g / cnt
+
+    def body(dW, inp):
+        xc, lc, mc = inp
+        logits, raw, lse, _ = _ce_chunk_stats(xc, head_w, lc, softcap)
+        p = jnp.exp(logits - lse[..., None])
+        onehot = jax.nn.one_hot(lc, V, dtype=jnp.float32)
+        dlogits = (p - onehot) * (mc * scale)[..., None]
+        if softcap > 0:
+            dlogits = dlogits * (1.0 - jnp.square(jnp.tanh(raw / softcap)))
+        dlogits = pt.shard(dlogits, "ce_batch", None, "ce_vocab")
+        dxc = (dlogits @ head_w.astype(jnp.float32).T).astype(x.dtype)
+        dxc = pt.shard(dxc, "batch", None, None)
+        dW_c = jnp.einsum("bcd,bcv->dv",
+                          pt.shard(xc, "ce_batch", None, None)
+                          .astype(jnp.float32), dlogits)
+        dW = pt.shard(dW + dW_c, None, "ce_vocab")
+        return dW, dxc
+
+    dW0 = pt.shard(jnp.zeros((D, V), jnp.float32), None, "ce_vocab")
+    dW, dxs = lax.scan(jax.checkpoint(body), dW0, (xr, lr, mr))
+    dx = jnp.moveaxis(dxs, 0, 1).reshape(B, S, D)
+    import numpy as _np
+    ct_labels = _np.zeros(labels.shape, jax.dtypes.float0)
+    return (dx, dW.astype(head_w.dtype), ct_labels, jnp.zeros_like(mask))
+
+
+_fused_ce.defvjp(lambda x, w, l, m, n, s: _fused_ce_fwd(x, w, l, m, n, s),
+                 _fused_ce_bwd)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy; logits (..., V) f32, labels (...) int."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

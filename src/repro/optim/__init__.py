@@ -1,0 +1,159 @@
+"""Pure-JAX optimizers: SGD(+momentum), AdamW, grad clipping, schedules.
+
+Interface:
+    opt = sgd(0.05)
+    state = opt.init(params)
+    params, state = opt.step(grads, state, params, step=i)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), n
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    step: Callable  # (grads, state, params, step) -> (params, state)
+    name: str = "opt"
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return ()
+
+    def step_fn(grads, state, params, step=0):
+        lr_t = _lr_at(lr, step)
+        new = jax.tree.map(
+            lambda p, g: p - (lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, step_fn, "sgd")
+
+
+def momentum(lr: Schedule, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def step_fn(grads, state, params, step=0):
+        lr_t = _lr_at(lr, step)
+        new_m = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree.map(
+            lambda p, m: p - (lr_t * m).astype(p.dtype), params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, step_fn, "momentum")
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def step_fn(grads, state, params, step=0):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = _lr_at(lr, step)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * u).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, m, v)
+        return new_p, {"m": m, "v": v}
+
+    return Optimizer(init, step_fn, "adamw")
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.0) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def make(name: str, lr: Schedule, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, kw.get("momentum", 0.9))
+    if name == "adamw":
+        return adamw(lr, weight_decay=kw.get("weight_decay", 0.0))
+    if name == "adamw_mixed":
+        return adamw_mixed(lr, weight_decay=kw.get("weight_decay", 0.0))
+    raise ValueError(name)
+
+
+def adamw_mixed(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """Mixed-precision AdamW: model params stay bf16 (halves weight
+    all-gathers and activation-adjacent buffers); the optimizer state holds
+    the f32 master copy + moments (ZeRO-sharded alongside the params)."""
+    def init(params):
+        f32 = lambda p: p.astype(jnp.float32)  # noqa: E731
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        return {"master": jax.tree.map(f32, params),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def step_fn(grads, state, params, step=0):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = _lr_at(lr, step)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(mp, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * mp
+            return mp - lr_t * u
+
+        master = jax.tree.map(upd, state["master"], m, v)
+        new_p = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master,
+                             params)
+        return new_p, {"master": master, "m": m, "v": v}
+
+    return Optimizer(init, step_fn, "adamw_mixed")

@@ -1,0 +1,165 @@
+"""Fault-tolerant CPSL training loop.
+
+Each round (paper Alg. 1):
+  1. draw the network state (device compute + channels),
+  2. small-timescale resource management: Gibbs clustering + greedy
+     spectrum (Alg. 3/4) — or fixed/random clustering,
+  3. run intra-cluster epochs + FedAvg per cluster, sequentially,
+  4. accumulate the *simulated wireless latency* of the round (eqs. 15-25)
+     next to the measured wall-clock,
+  5. checkpoint every ``ckpt_every`` rounds (async, atomic, keep-k);
+     auto-resume picks up the latest checkpoint including RNG/rounds.
+
+Failure handling: ``fail_at_round`` injects a crash (tests restart the
+trainer and verify bit-exact continuation); SIGTERM triggers a final
+checkpoint before exit (preemption-safe).
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CPSLConfig
+from repro.core import latency as lt
+from repro.core import resource as rs
+from repro.core.channel import NetworkCfg, device_means, sample_network
+from repro.core.compression import compression_ratio
+from repro.core.cpsl import CPSL
+from repro.core.latency import CutProfile
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class TrainerCfg:
+    rounds: int = 10
+    ckpt_every: int = 5
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    async_ckpt: bool = True
+    resource_mgmt: str = "gibbs"      # gibbs | random | heuristic | fixed
+    gibbs_iters: int = 200
+    fail_at_round: Optional[int] = None
+    log_path: Optional[str] = None
+    seed: int = 0
+
+
+class CPSLTrainer:
+    def __init__(self, cpsl: CPSL, dataset, prof: CutProfile,
+                 ncfg: NetworkCfg, tcfg: TrainerCfg,
+                 eval_fn: Optional[Callable] = None):
+        self.cpsl, self.ds, self.prof = cpsl, dataset, prof
+        self.ncfg, self.tcfg = ncfg, tcfg
+        self.eval_fn = eval_fn
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep,
+                                 async_save=tcfg.async_ckpt)
+        self.mu_f, self.mu_snr = device_means(ncfg, tcfg.seed)
+        self.history: List[dict] = []
+        self._stop = False
+        try:
+            signal.signal(signal.SIGTERM, self._sigterm)
+        except ValueError:
+            pass  # not main thread
+
+    def _sigterm(self, *_):
+        self._stop = True
+
+    # -- round-level resource management (paper small timescale) -------------
+
+    def _plan_round(self, v: int, rnd: int):
+        rng = np.random.default_rng(self.tcfg.seed * 1000 + rnd)
+        net = sample_network(self.ncfg, self.mu_f, self.mu_snr, rng)
+        M, K = self.cpsl.ccfg.n_clusters, self.cpsl.ccfg.cluster_size
+        kind = self.tcfg.resource_mgmt
+        if kind == "gibbs":
+            clusters, xs, lat = rs.gibbs_clustering(
+                v, net, self.ncfg, self.prof, self.cpsl.ccfg.batch_per_device,
+                self.cpsl.ccfg.local_epochs, M, K,
+                iters=self.tcfg.gibbs_iters, seed=self.tcfg.seed + rnd)
+        elif kind == "heuristic":
+            clusters, xs, lat = rs.heuristic_clustering(
+                v, net, self.ncfg, self.prof,
+                self.cpsl.ccfg.batch_per_device,
+                self.cpsl.ccfg.local_epochs, M, K)
+        else:   # random / fixed
+            clusters, xs, lat = rs.random_clustering(
+                v, net, self.ncfg, self.prof,
+                self.cpsl.ccfg.batch_per_device,
+                self.cpsl.ccfg.local_epochs, M, K,
+                seed=(0 if kind == "fixed" else self.tcfg.seed + rnd))
+        # upload compression shrinks xi_d on the DMT uplink
+        cr = compression_ratio(self.cpsl.ccfg.compress_uploads,
+                               self.cpsl.ccfg.compress_topk)
+        if cr < 1.0:
+            import copy
+            prof2 = copy.copy(self.prof)
+            prof2.xi_d = self.prof.xi_d * cr
+            lat = lt.round_latency(v, clusters, xs, net, self.ncfg, prof2,
+                                   self.cpsl.ccfg.batch_per_device,
+                                   self.cpsl.ccfg.local_epochs)
+        return clusters, xs, lat
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, key, v: Optional[int] = None):
+        v = v if v is not None else self.cpsl.ccfg.cut_layer
+        state = self.cpsl.init_state(key)
+        start_round = 0
+        meta_target = {"round": jnp.zeros((), jnp.int32),
+                       "sim_time": jnp.zeros(()), "state": state}
+        restored = self.ckpt.restore(meta_target)
+        if restored is not None:
+            state = restored["state"]
+            start_round = int(restored["round"])
+            sim_time = float(restored["sim_time"])
+        else:
+            sim_time = 0.0
+
+        for rnd in range(start_round, self.tcfg.rounds):
+            if self.tcfg.fail_at_round is not None \
+                    and rnd == self.tcfg.fail_at_round:
+                raise SimulatedFailure(f"injected failure at round {rnd}")
+            t0 = time.monotonic()
+            clusters, xs, lat = self._plan_round(v, rnd)
+
+            def batch_fn(m, l, _clusters=clusters, _rnd=rnd):
+                seed = (self.tcfg.seed * 1_000_003 + _rnd * 971
+                        + m * 31 + l) % (2**31)
+                b = self.ds.cluster_batch(_clusters[m], seed=seed)
+                return jax.tree.map(jnp.asarray, b)
+
+            state, metrics = self.cpsl.run_round(state, batch_fn,
+                                                 n_clusters=len(clusters))
+            sim_time += lat
+            wall = time.monotonic() - t0
+            rec = {"round": rnd, "loss": metrics["loss"],
+                   "sim_latency_s": lat, "sim_time_s": sim_time,
+                   "wall_s": wall}
+            if self.eval_fn is not None:
+                rec["eval"] = self.eval_fn(self.cpsl, state)
+            self.history.append(rec)
+            if self.tcfg.log_path:
+                with open(self.tcfg.log_path, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+
+            last = rnd == self.tcfg.rounds - 1
+            if (rnd + 1) % self.tcfg.ckpt_every == 0 or last or self._stop:
+                self.ckpt.save({"round": jnp.asarray(rnd + 1, jnp.int32),
+                                "sim_time": jnp.asarray(sim_time),
+                                "state": state},
+                               step=rnd + 1, block=last or self._stop)
+            if self._stop:
+                break
+        self.ckpt.wait()
+        return state

@@ -1,0 +1,164 @@
+"""Pallas kernel validation (interpret mode on CPU): shape/dtype sweeps
+against the pure-jnp ref oracles, per the deliverable-c requirement."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.kernel import flash_attention_flat
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.ssd.kernel import ssd_flat
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_scan_ref
+from repro.models.common import naive_attention
+from repro.models.mamba2 import ssd_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -- flash attention ---------------------------------------------------------
+
+FA_CASES = [
+    # (BH, S, D, causal, window, softcap, dtype)
+    (4, 256, 64, True, 0, 0.0, jnp.float32),
+    (2, 128, 128, True, 64, 0.0, jnp.float32),
+    (2, 256, 64, True, 0, 50.0, jnp.float32),
+    (3, 128, 32, False, 0, 0.0, jnp.float32),
+    (2, 512, 64, True, 0, 0.0, jnp.float32),
+    (2, 128, 64, True, 0, 0.0, jnp.bfloat16),
+    (1, 64, 256, True, 0, 0.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("BH,S,D,causal,window,cap,dtype", FA_CASES)
+def test_flash_kernel_vs_ref(BH, S, D, causal, window, cap, dtype):
+    q = jax.random.normal(KEY, (BH, S, D)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (BH, S, D)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (BH, S, D)).astype(dtype)
+    out = flash_attention_flat(q, k, v, causal=causal, window=window,
+                               softcap=cap, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert out.dtype == dtype
+    assert jnp.abs(out.astype(jnp.float32)
+                   - ref.astype(jnp.float32)).max() < tol
+
+
+def test_flash_kernel_gqa_kv_repeat():
+    """kv_repeat: query head h reads kv head h // R."""
+    BHkv, R, S, D = 2, 3, 128, 64
+    q = jax.random.normal(KEY, (BHkv * R, S, D))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (BHkv, S, D))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (BHkv, S, D))
+    out = flash_attention_flat(q, k, v, causal=True, kv_repeat=R,
+                               interpret=True)
+    kf = jnp.repeat(k, R, axis=0)
+    vf = jnp.repeat(v, R, axis=0)
+    ref = attention_ref(q, kf, vf, causal=True)
+    assert jnp.abs(out - ref).max() < 2e-5
+
+
+def test_flash_grouped_wrapper_and_grad():
+    q = jax.random.normal(KEY, (2, 128, 2, 3, 64))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 128, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 128, 2, 64))
+    out = fa_ops.flash_attention(q, k, v, True, 0, 0.0, 0)
+    ref = naive_attention(q, k, v, causal=True)
+    assert jnp.abs(out - ref).max() < 1e-5
+    g = jax.grad(lambda q: fa_ops.flash_attention(q, k, v, True, 0, 0.0,
+                                                  0).sum())(q)
+    g_ref = jax.grad(lambda q: naive_attention(
+        q, k, v, causal=True).astype(jnp.float32).sum())(q)
+    assert jnp.abs(g - g_ref).max() < 1e-4
+
+
+def test_flash_kernel_block_shape_sweep():
+    q = jax.random.normal(KEY, (2, 256, 32))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 256, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 256, 32))
+    ref = attention_ref(q, k, v, causal=True)
+    for bq in (32, 64, 128, 256):
+        for bk in (32, 128, 256):
+            out = flash_attention_flat(q, k, v, causal=True, block_q=bq,
+                                       block_kv=bk, interpret=True)
+            assert jnp.abs(out - ref).max() < 2e-5, (bq, bk)
+
+
+# -- SSD ---------------------------------------------------------------------
+
+SSD_CASES = [
+    # (BH, S, P, N, Q, dtype)
+    (3, 256, 64, 32, 64, jnp.float32),
+    (2, 128, 32, 128, 128, jnp.float32),
+    (4, 64, 16, 16, 32, jnp.float32),
+    (2, 128, 64, 64, 64, jnp.bfloat16),
+    (1, 512, 32, 32, 128, jnp.float32),
+]
+
+
+def _ssd_inputs(BH, S, P, N, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (BH, S, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (BH, S)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (BH,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (BH, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (BH, S, N)) * 0.5).astype(dtype)
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("BH,S,P,N,Q,dtype", SSD_CASES)
+def test_ssd_kernel_vs_scan_oracle(BH, S, P, N, Q, dtype):
+    x, dt, A, Bm, Cm = _ssd_inputs(BH, S, P, N, dtype)
+    y_k, h_k = ssd_flat(x, dt, A, Bm, Cm, chunk=Q, interpret=True)
+    y_s, h_s = ssd_scan_ref(x, dt, A, Bm, Cm)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-5
+    assert jnp.abs(y_k.astype(jnp.float32)
+                   - y_s.astype(jnp.float32)).max() < tol
+    assert jnp.abs(h_k - h_s).max() < tol
+
+
+def test_ssd_chunked_ref_vs_scan():
+    x, dt, A, Bm, Cm = _ssd_inputs(2, 256, 32, 64, jnp.float32)
+    y_c, h_c = ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=64)
+    y_s, h_s = ssd_scan_ref(x, dt, A, Bm, Cm)
+    assert jnp.abs(y_c - y_s).max() < 5e-5
+    assert jnp.abs(h_c - h_s).max() < 5e-5
+
+
+def test_ssd_ops_model_layout_and_grad():
+    B_, S, H, P, N = 2, 128, 3, 32, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B_, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B_, S, H)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B_, S, H, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B_, S, H, N)) * 0.5
+    y_o, h_o = ssd_ops.ssd(x, dt, A, Bm, Cm, 64)
+    y_r, h_r = ssd_scan(x, dt, A, Bm, Cm)
+    assert jnp.abs(y_o - y_r).max() < 2e-5
+    g = jax.grad(lambda x: ssd_ops.ssd(x, dt, A, Bm, Cm, 64)[0].sum())(x)
+    g_ref = jax.grad(
+        lambda x: ssd_scan(x, dt, A, Bm, Cm)[0].astype(jnp.float32).sum())(x)
+    assert jnp.abs(g - g_ref).max() < 2e-5
+
+
+def test_model_uses_pallas_impl_end_to_end():
+    """attn_impl/ssd_impl == 'pallas' runs through the model forward."""
+    from repro.configs import registry
+    from repro.models import api
+    cfg = registry.reduce_for_smoke(registry.get("qwen3-32b")).replace(
+        attn_impl="pallas", q_chunk=16, kv_chunk=16)
+    p = api.init(KEY, cfg)
+    b = registry.concrete_batch(KEY, cfg, batch=1, seq=64)
+    logits, _ = api.forward(p, b, cfg)
+    cfg2 = cfg.replace(attn_impl="naive")
+    logits2, _ = api.forward(p, b, cfg2)
+    assert jnp.abs(logits - logits2).max() < 0.15  # bf16 path tolerance
+
+    cfg3 = registry.reduce_for_smoke(registry.get("mamba2-2.7b")).replace(
+        ssd_impl="pallas")
+    p3 = api.init(KEY, cfg3)
+    b3 = registry.concrete_batch(KEY, cfg3, batch=1, seq=64)
+    logits3, _ = api.forward(p3, b3, cfg3)
+    logits4, _ = api.forward(p3, b3, cfg3.replace(ssd_impl="scan"))
+    assert jnp.abs(logits3 - logits4).max() < 0.15
