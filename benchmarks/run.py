@@ -10,8 +10,9 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (fig5_training, fig6_cluster_size, fig7_cut_layer,
-                        fig8_resource, roofline, table2_latency)
+from benchmarks import (bench_dynamics, fig5_training, fig6_cluster_size,
+                        fig7_cut_layer, fig8_resource, roofline,
+                        table2_latency)
 
 BENCHES = {
     "table2_latency": table2_latency.main,
@@ -20,6 +21,7 @@ BENCHES = {
     "fig5_training": fig5_training.main,
     "fig6_cluster_size": fig6_cluster_size.main,
     "roofline": roofline.main,
+    "bench_dynamics": bench_dynamics.main,
 }
 
 

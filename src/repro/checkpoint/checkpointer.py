@@ -16,7 +16,29 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # optional: fall back to stdlib zlib
+    zstd = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "zstandard package is not installed")
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _path_str(path) -> str:
@@ -51,11 +73,11 @@ def serialize(tree) -> bytes:
         arr = np.asarray(jax.device_get(leaf))
         payload[_path_str(path)] = _pack_array(arr)
     raw = msgpack.packb(payload, use_bin_type=True)
-    return zstd.ZstdCompressor(level=3).compress(raw)
+    return _compress(raw)
 
 
 def deserialize(blob: bytes, target) -> Any:
-    raw = zstd.ZstdDecompressor().decompress(blob)
+    raw = _decompress(blob)
     payload = msgpack.unpackb(raw, raw=False)
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
     leaves = []

@@ -176,3 +176,21 @@ SHAPES = {
     "decode_32k":  ShapeCfg("decode_32k", 32768, 128, "decode"),
     "long_500k":   ShapeCfg("long_500k", 524288, 1, "decode"),
 }
+
+
+@dataclass
+class SimCfg:
+    """Dynamic-network simulation (``repro.sim``): round/timescale layout
+    of one end-to-end "train under dynamics" run."""
+    rounds: int = 20                 # small-timescale slots == CPSL rounds
+    epoch_len: int = 5               # rounds per large timescale epoch (Alg. 2 rerun)
+    cluster_size: int = 5            # target K; clusters shrink under churn
+    saa_samples: int = 3             # J network samples per SAA evaluation
+    saa_gibbs_iters: int = 40        # Gibbs iters inside the SAA inner loop
+    gibbs_iters: int = 120           # Gibbs iters for the per-slot plan
+    cuts: Optional[Tuple[int, ...]] = None  # candidate cut layers (None = all)
+    trace_path: Optional[str] = None # JSONL trace destination
+    seed: int = 0
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)

@@ -74,6 +74,70 @@ def cluster_latency(v: int, devices: Sequence[int], x: np.ndarray,
     return float(d_S + (L - 1) * d_I + d_E)          # D_m
 
 
+class BatchedClusterEvaluator:
+    """Vectorized ``cluster_latency`` for one fixed (cut layer, cluster,
+    network draw): hoists every x-independent term at construction, then
+    scores whole (P, K) batches of candidate allocations per call.
+
+    Exactness contract: every expression keeps the operand order of
+    ``cluster_latency`` (e.g. ``B*xi_s / (x*r)``, never
+    ``(B*xi_s/r) * (1/x)``), all in float64 — so the evaluated latencies
+    are bit-identical to P scalar calls, and greedy/Gibbs *decisions*
+    (argmins, Metropolis accepts) made on top of them match the looped
+    implementations exactly. Tests assert this."""
+
+    def __init__(self, v: int, devices: Sequence[int], net: NetworkState,
+                 ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
+                 physical_gradients: bool = False):
+        c = prof.at(v)
+        dev = np.asarray(devices)
+        f = net.f[dev] * ncfg.kappa
+        self.r = net.rate[dev]
+        C = ncfg.n_subcarriers
+        K = len(dev)
+        self.K, self.L = K, L
+        xi_g = c["xi_g"] * (B if physical_gradients else 1.0)
+        # x-independent phase terms
+        tau_b = c["xi_d"] / (C * self.r)                 # (15)
+        self.tau_d = B * c["gamma_dF"] / f               # (16)
+        self.tau_e = K * B * (c["gamma_sF"] + c["gamma_sB"]) \
+            / (ncfg.f_server * ncfg.kappa)               # (18)
+        self.tau_u = B * c["gamma_dB"] / f               # (21)
+        self.bd = tau_b + self.tau_d                     # partial sum of (19)
+        # numerators of the x-dependent terms
+        self.num_s = B * c["xi_s"]                       # (17)
+        self.num_g = xi_g                                # (20)
+        self.num_t = c["xi_d"]                           # (23)
+
+    def latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(P, K) candidate allocations -> (P,) cluster latencies D_m."""
+        xs = np.asarray(xs, dtype=np.float64)
+        if xs.ndim == 1:
+            xs = xs[None, :]
+        xr = xs * self.r
+        tau_s = self.num_s / xr                          # (17)
+        tau_g = self.num_g / xr                          # (20)
+        tau_t = self.num_t / xr                          # (23)
+        gu = tau_g + self.tau_u
+        d_S = np.max(self.bd + tau_s, axis=1) + self.tau_e           # (19)
+        d_I = np.max(gu + self.tau_d + tau_s, axis=1) + self.tau_e   # (22)
+        d_E = np.max(gu + tau_t, axis=1)                             # (24)
+        return d_S + (self.L - 1) * d_I + d_E
+
+
+def cluster_latency_batch(v: int, devices: Sequence[int], xs: np.ndarray,
+                          net: NetworkState, ncfg: NetworkCfg,
+                          prof: CutProfile, B: int, L: int,
+                          physical_gradients: bool = False) -> np.ndarray:
+    """One-shot form of ``BatchedClusterEvaluator``: evaluate P candidate
+    allocations (``xs``: (P, K)) for a cluster, bit-identical to P scalar
+    ``cluster_latency`` calls. Build the evaluator directly when scoring
+    many batches for the same cluster."""
+    return BatchedClusterEvaluator(
+        v, devices, net, ncfg, prof, B, L,
+        physical_gradients=physical_gradients).latencies(xs)
+
+
 def round_latency(v: int, clusters: Sequence[Sequence[int]],
                   xs: Sequence[np.ndarray], net: NetworkState,
                   ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,

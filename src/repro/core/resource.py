@@ -23,8 +23,10 @@ def greedy_spectrum(v: int, devices: Sequence[int], net: NetworkState,
                     ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
                     C: Optional[int] = None) -> Tuple[np.ndarray, float]:
     """Allocate C subcarriers to the cluster's devices: start at 1 each,
-    then repeatedly give one to the device yielding the largest latency
-    reduction. Returns (x, D_m)."""
+    then repeatedly give one to the device yielding the lowest resulting
+    cluster latency — i.e. argmin_k Omega_k, which (the current latency
+    Omega being fixed across candidates) equals the paper's
+    argmax_k (Omega - Omega_k) largest-gain rule. Returns (x, D_m)."""
     C = ncfg.n_subcarriers if C is None else C
     K = len(devices)
     assert C >= K, "need at least one subcarrier per device"
@@ -34,9 +36,13 @@ def greedy_spectrum(v: int, devices: Sequence[int], net: NetworkState,
         return cluster_latency(v, devices, xv, net, ncfg, prof, B, L)
 
     cur = lat(x)
+    if C == K:
+        # exactly one subcarrier per device is the only feasible point
+        return x, cur
     for _ in range(C - K):
-        # paper Alg. 3 line 9: k* = argmax_k (Omega - Omega_k); all
-        # subcarriers are allocated even when the gain is zero.
+        # paper Alg. 3 line 9: k* = argmax_k (Omega - Omega_k), realised
+        # as argmin_k over candidate latencies Omega_k; all subcarriers
+        # are allocated even when the gain is zero.
         cands = np.empty(K)
         for k in range(K):
             x[k] += 1
@@ -74,15 +80,20 @@ def brute_force_spectrum(v, devices, net, ncfg, prof, B, L,
 # Alg. 4 — Gibbs-sampling joint clustering + spectrum allocation
 # --------------------------------------------------------------------------
 
-def _round_latency_cached(v, clusters, net, ncfg, prof, B, L, cache):
+def _round_latency_cached(v, clusters, net, ncfg, prof, B, L, cache,
+                          spectrum_fn=None):
+    spectrum_fn = spectrum_fn or greedy_spectrum
     total = 0.0
     xs = []
     for ds in clusters:
         key = tuple(sorted(ds))
         if key not in cache:
-            cache[key] = greedy_spectrum(v, list(key), net, ncfg, prof, B, L)
+            cache[key] = spectrum_fn(v, list(key), net, ncfg, prof, B, L)
         x, lat = cache[key]
-        xs.append(x)
+        # the cached allocation is aligned with the sorted key; reorder it
+        # to the cluster's own device order so (clusters, xs) stay paired
+        rank = {d: i for i, d in enumerate(key)}
+        xs.append(np.asarray(x)[[rank[d] for d in ds]])
         total += lat
     return total, xs
 
@@ -91,19 +102,36 @@ def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
                      prof: CutProfile, B: int, L: int, n_clusters: int,
                      cluster_size: int, iters: int = 1000,
                      delta: float = 1e-4, seed: int = 0,
-                     track: bool = False):
+                     track: bool = False, sizes: Optional[Sequence[int]] = None,
+                     spectrum_fn=None):
     """Alg. 4: random swap proposals accepted w.p. 1/(1+exp((new-old)/delta)).
+
+    ``sizes`` (optional) partitions the N devices into clusters of the
+    given (possibly unequal) sizes instead of ``n_clusters`` equal chunks
+    of ``cluster_size`` — needed under churn, where N is not always M*K.
+    ``spectrum_fn`` swaps in an alternative Alg. 3 implementation (e.g.
+    the vectorized ``repro.sim.batched.greedy_spectrum_batched``).
 
     Returns (clusters, xs, latency[, history])."""
     N = len(net.f)
     rng = np.random.default_rng(seed)
     order = rng.permutation(N)
-    clusters = [list(order[m * cluster_size:(m + 1) * cluster_size])
-                for m in range(n_clusters)]
+    if sizes is not None:
+        assert sum(sizes) == N, "cluster sizes must partition the devices"
+        n_clusters = len(sizes)
+        bounds = np.concatenate([[0], np.cumsum(sizes)])
+        clusters = [list(order[bounds[m]:bounds[m + 1]])
+                    for m in range(n_clusters)]
+    else:
+        clusters = [list(order[m * cluster_size:(m + 1) * cluster_size])
+                    for m in range(n_clusters)]
     cache: dict = {}
-    cur, xs = _round_latency_cached(v, clusters, net, ncfg, prof, B, L, cache)
+    cur, xs = _round_latency_cached(v, clusters, net, ncfg, prof, B, L, cache,
+                                    spectrum_fn)
     best = (cur, [list(c) for c in clusters], [x.copy() for x in xs])
     hist = [cur]
+    if n_clusters < 2:
+        iters = 0          # nothing to swap
     for _ in range(iters):
         m, mp = rng.choice(n_clusters, size=2, replace=False)
         i = rng.integers(len(clusters[m]))
@@ -111,7 +139,7 @@ def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
         cand = [list(c) for c in clusters]
         cand[m][i], cand[mp][j] = cand[mp][j], cand[m][i]
         new, new_xs = _round_latency_cached(v, cand, net, ncfg, prof, B, L,
-                                            cache)
+                                            cache, spectrum_fn)
         eps = 1.0 / (1.0 + math.exp(min((new - cur) / max(delta, 1e-12),
                                         700.0)))
         if rng.random() < eps:
@@ -172,12 +200,21 @@ def random_clustering(v, net, ncfg, prof, B, L, n_clusters, cluster_size,
 def saa_cut_selection(prof: CutProfile, ncfg: NetworkCfg, B: int, L: int,
                       n_clusters: int, cluster_size: int, n_samples: int = 8,
                       gibbs_iters: int = 200, seed: int = 0,
-                      cuts: Optional[Sequence[int]] = None
-                      ) -> Tuple[int, np.ndarray]:
+                      cuts: Optional[Sequence[int]] = None,
+                      means_override: Optional[Tuple[np.ndarray, np.ndarray]]
+                      = None, sizes: Optional[Sequence[int]] = None,
+                      spectrum_fn=None) -> Tuple[int, np.ndarray]:
     """Draw J network samples; for each cut layer v evaluate the mean
     per-round latency under Alg. 4 decisions; return argmin and the
-    per-cut mean latencies."""
-    mu_f, mu_snr = device_means(ncfg, seed)
+    per-cut mean latencies.
+
+    ``means_override=(mu_f, mu_snr)`` samples around externally tracked
+    device means (the dynamic simulator's current estimate) instead of
+    drawing fresh means from ``ncfg``."""
+    if means_override is not None:
+        mu_f, mu_snr = means_override
+    else:
+        mu_f, mu_snr = device_means(ncfg, seed)
     rng = np.random.default_rng(seed + 1)
     nets = [sample_network(ncfg, mu_f, mu_snr, rng) for _ in range(n_samples)]
     cuts = list(cuts) if cuts is not None else list(range(1, prof.n_cuts + 1))
@@ -187,7 +224,8 @@ def saa_cut_selection(prof: CutProfile, ncfg: NetworkCfg, B: int, L: int,
         for j, net in enumerate(nets):
             _, _, lat = gibbs_clustering(v, net, ncfg, prof, B, L,
                                          n_clusters, cluster_size,
-                                         iters=gibbs_iters, seed=seed + j)
+                                         iters=gibbs_iters, seed=seed + j,
+                                         sizes=sizes, spectrum_fn=spectrum_fn)
             tot += lat
         means[ci] = tot / n_samples
     v_star = cuts[int(np.argmin(means))]

@@ -12,6 +12,13 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 
+def batch_seed(seed: int, rnd: int, m: int, l: int) -> int:
+    """Deterministic per-(run, round, cluster, epoch) batch seed shared by
+    every trainer that promises bit-exact restart (``train.trainer`` and
+    ``sim.engine`` must draw identical data for identical coordinates)."""
+    return (seed * 1_000_003 + rnd * 971 + m * 31 + l) % (2 ** 31)
+
+
 class CPSLDataset:
     def __init__(self, images: np.ndarray, labels: np.ndarray,
                  device_indices: List[np.ndarray], batch: int,
@@ -53,9 +60,20 @@ class LMClusterData:
         self.rngs = [np.random.default_rng(seed + 7 * d)
                      for d in range(n_devices)]
 
-    def cluster_batch(self, devices: Sequence[int]):
-        parts = [self.lm.sample(self.B, self.S, self.rngs[d])
-                 for d in devices]
+    def cluster_batch(self, devices: Sequence[int],
+                      seed: Optional[int] = None):
+        """``seed`` (as in ``CPSLDataset``) makes the draw a pure function
+        of (seed, slot, device) — required by restartable/simulated
+        trainers. The slot index is mixed in so a device repeated in the
+        list (engine padding of churn-shrunk clusters) gets fresh samples
+        rather than a bit-identical, double-weighted row."""
+        if seed is not None:
+            parts = [self.lm.sample(self.B, self.S,
+                                    np.random.default_rng((seed, i, d)))
+                     for i, d in enumerate(devices)]
+        else:
+            parts = [self.lm.sample(self.B, self.S, self.rngs[d])
+                     for d in devices]
         return {k: np.stack([p[k] for p in parts]) for k in parts[0]}
 
 

@@ -1,0 +1,26 @@
+"""repro.sim — event-driven wireless dynamics simulation for CPSL.
+
+Layers on top of ``repro.core``:
+  dynamics.py    Gauss-Markov correlated fading + compute drift, device
+                 churn (arrival/departure) and per-device energy budgets —
+                 generalizes the i.i.d. draws of ``core.channel``.
+  batched.py     vectorized candidate-allocation evaluation (bit-identical
+                 to the scalar ``core.latency.cluster_latency``) plus fast
+                 greedy/Gibbs built on it.
+  controller.py  online two-timescale controller wrapping Algs. 2-4 with a
+                 stale-decision fallback for mid-round departures.
+  engine.py      round executor coupling controller + latency model + the
+                 real ``core.cpsl`` trainer; emits JSONL traces.
+"""
+from repro.sim.batched import (BatchedClusterEvaluator,
+                               greedy_spectrum_batched,
+                               gibbs_clustering_batched)
+from repro.sim.controller import Plan, TwoTimescaleController
+from repro.sim.dynamics import DynamicsCfg, Event, NetworkProcess
+from repro.sim.engine import SimEngine
+
+__all__ = [
+    "BatchedClusterEvaluator", "greedy_spectrum_batched",
+    "gibbs_clustering_batched", "Plan", "TwoTimescaleController",
+    "DynamicsCfg", "Event", "NetworkProcess", "SimEngine",
+]

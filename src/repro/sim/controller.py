@@ -1,0 +1,142 @@
+"""Online two-timescale resource controller (paper §VII, made dynamic).
+
+Large timescale (every ``SimCfg.epoch_len`` slots): re-run SAA cut-layer
+selection (Alg. 2) around the *currently tracked* device means — churn
+changes the population, so the optimal cut drifts over time.
+
+Small timescale (every slot): re-cluster + re-allocate spectrum with
+Gibbs + greedy (Algs. 3/4) on the current channel/compute snapshot. Under
+churn N is rarely M*K, so clusters are balanced to at most
+``cluster_size`` devices each.
+
+Stale-decision fallback: when devices vanish *mid-round* (after the slot
+plan was made), ``repair`` drops them from their clusters and re-runs only
+the per-cluster spectrum allocation (Alg. 3) for the affected clusters,
+instead of a full (expensive) re-clustering — the plan is marked
+``stale`` so traces record that the executed decision differs from the
+optimizer output.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import SimCfg
+from repro.core import resource as rs
+from repro.core.channel import NetworkCfg, NetworkState
+from repro.core.latency import CutProfile, cluster_latency
+from repro.sim.batched import greedy_spectrum_batched
+
+
+def balanced_sizes(n: int, k: int) -> List[int]:
+    """Partition n devices into ceil(n/k) clusters of near-equal size."""
+    if n <= 0:
+        return []
+    m = max(1, -(-n // k))
+    base, extra = divmod(n, m)
+    return [base + (1 if i < extra else 0) for i in range(m)]
+
+
+@dataclass
+class Plan:
+    """One slot's executed resource-management decision."""
+    v: int
+    clusters: List[List[int]]        # local indices into the slot snapshot
+    ids: np.ndarray                  # local index -> global device id
+    xs: List[np.ndarray]             # subcarriers per device, per cluster
+    latency: float                   # predicted round latency (eq. 25)
+    stale: bool = False              # True after a mid-round repair
+
+    def global_clusters(self) -> List[List[int]]:
+        return [[int(self.ids[i]) for i in c] for c in self.clusters]
+
+
+class TwoTimescaleController:
+    def __init__(self, prof: CutProfile, ncfg: NetworkCfg, B: int, L: int,
+                 scfg: SimCfg, spectrum_fn=greedy_spectrum_batched):
+        self.prof, self.ncfg = prof, ncfg
+        self.B, self.L = B, L
+        self.scfg = scfg
+        self.spectrum_fn = spectrum_fn
+        self.v: Optional[int] = None
+
+    def _ncfg_for(self, n: int) -> NetworkCfg:
+        return self.ncfg.replace(n_devices=n)
+
+    # -- large timescale (Alg. 2) ---------------------------------------------
+
+    def select_cut(self, mu_f: np.ndarray, mu_snr: np.ndarray, slot: int
+                   ) -> Tuple[int, np.ndarray]:
+        """SAA cut selection around the current population means."""
+        n = len(mu_f)
+        sizes = balanced_sizes(n, self.scfg.cluster_size)
+        v, means = rs.saa_cut_selection(
+            self.prof, self._ncfg_for(n), self.B, self.L,
+            n_clusters=len(sizes), cluster_size=max(sizes),
+            n_samples=self.scfg.saa_samples,
+            gibbs_iters=self.scfg.saa_gibbs_iters,
+            # offset the SAA stream away from NetworkProcess's
+            # default_rng(dcfg.seed + 1): with the usual scfg.seed ==
+            # dcfg.seed, an unoffset slot-0 call would draw a "sample"
+            # bit-identical to the realized network — a clairvoyance leak
+            seed=self.scfg.seed + 7919 * slot + 104_729,
+            cuts=self.scfg.cuts, means_override=(mu_f, mu_snr),
+            sizes=sizes, spectrum_fn=self.spectrum_fn)
+        self.v = v
+        return v, means
+
+    # -- small timescale (Algs. 3/4) ------------------------------------------
+
+    def plan_slot(self, net: NetworkState, ids: np.ndarray, slot: int
+                  ) -> Plan:
+        assert self.v is not None, "select_cut must run before plan_slot"
+        n = len(ids)
+        sizes = balanced_sizes(n, self.scfg.cluster_size)
+        clusters, xs, lat = rs.gibbs_clustering(
+            self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
+            n_clusters=len(sizes), cluster_size=max(sizes),
+            iters=self.scfg.gibbs_iters,
+            # distinct namespace from both the NetworkProcess streams and
+            # select_cut's SAA stream (see the offset comment there)
+            seed=self.scfg.seed + slot + 53_639,
+            sizes=sizes, spectrum_fn=self.spectrum_fn)
+        return Plan(v=self.v, clusters=[list(c) for c in clusters],
+                    ids=np.asarray(ids), xs=[np.asarray(x) for x in xs],
+                    latency=float(lat))
+
+    # -- stale-decision fallback ----------------------------------------------
+
+    def repair(self, plan: Plan, net: NetworkState,
+               departed_global: Sequence[int]) -> Plan:
+        """Remove departed devices from a slot plan without re-clustering.
+
+        Affected clusters get a fresh Alg. 3 run over their survivors;
+        untouched clusters keep their (now slightly stale) allocation.
+        Clusters that lose all members are dropped."""
+        departed = set(int(g) for g in departed_global)
+        gid = plan.ids
+        clusters: List[List[int]] = []
+        xs: List[np.ndarray] = []
+        latency = 0.0
+        for c, x in zip(plan.clusters, plan.xs):
+            keep = [i for i in c if int(gid[i]) not in departed]
+            if not keep:
+                continue
+            if len(keep) == len(c):
+                clusters.append(list(c))
+                xs.append(np.asarray(x))
+                lat = cluster_latency(plan.v, c, x, net,
+                                      self._ncfg_for(len(gid)),
+                                      self.prof, self.B, self.L)
+                latency += lat
+            else:
+                x2, lat = self.spectrum_fn(plan.v, keep, net,
+                                           self._ncfg_for(len(gid)),
+                                           self.prof, self.B, self.L)
+                clusters.append(keep)
+                xs.append(x2)
+                latency += lat
+        return Plan(v=plan.v, clusters=clusters, ids=gid, xs=xs,
+                    latency=float(latency), stale=True)

@@ -1,0 +1,256 @@
+"""Event-driven round executor: "train CPSL under network dynamics".
+
+Couples four pieces that previously only existed in isolation:
+
+  * ``sim.dynamics.NetworkProcess``  — Gauss-Markov fading + churn + energy
+  * ``sim.controller``               — online two-timescale Algs. 2-4
+  * ``core.latency``                 — the eq. (15)-(25) wireless cost model
+  * ``core.cpsl.CPSL``               — the real (jax) split-learning trainer
+
+Each round (== one small-timescale slot):
+  1. snapshot the network; on epoch boundaries re-select the cut layer
+     (large timescale) — a cut change re-splits the model and restarts the
+     device/server parameters (the paper's Alg. 2 runs once up front; here
+     it can react to churn, and the trace records every switch);
+  2. plan the slot (Gibbs clustering + vectorized greedy spectrum);
+  3. devices may vanish mid-round -> ``controller.repair`` (stale plan);
+  4. score the executed plan with the latency model and advance sim time;
+  5. run the actual CPSL training round on the planned clusters;
+  6. drain device batteries (compute + transmit energy), possibly
+     triggering depletion departures;
+  7. evolve the fading/compute processes and sample arrivals;
+  8. append a JSONL trace record with everything needed to *recompute*
+     the round latency offline (f, rate, clusters, xs, v).
+"""
+from __future__ import annotations
+
+import json
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CPSLConfig, SimCfg
+from repro.core import latency as lt
+from repro.core.channel import NetworkCfg
+from repro.core.cpsl import CPSL
+from repro.core.latency import CutProfile
+from repro.core.splitting import make_split_model
+from repro.data.pipeline import batch_seed
+from repro.sim.controller import Plan, TwoTimescaleController
+from repro.sim.dynamics import DynamicsCfg, NetworkProcess
+
+
+def _jsonable(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if hasattr(o, "__array__") and not isinstance(o, (str, bytes)):
+        return _jsonable(np.asarray(o))   # jax arrays etc.
+    if isinstance(o, (list, tuple)):
+        return [_jsonable(x) for x in o]
+    if isinstance(o, dict):
+        return {k: _jsonable(v) for k, v in o.items()}
+    return o
+
+
+def device_round_energy(plan: Plan, net, ncfg: NetworkCfg, prof: CutProfile,
+                        B: int, L: int, p_compute_w: float, p_tx_w: float
+                        ) -> dict:
+    """Per-device energy (J) for one executed round: compute power times
+    FP+BP time plus transmit power times uplink airtime (smashed data each
+    local epoch + final model upload). Returns {global_id: joules}."""
+    c = prof.at(plan.v)
+    out = {}
+    for cluster, x in zip(plan.clusters, plan.xs):
+        for i, k in zip(cluster, np.asarray(x, dtype=np.float64)):
+            f = net.f[i] * ncfg.kappa
+            r = net.rate[i]
+            t_comp = L * B * (c["gamma_dF"] + c["gamma_dB"]) / f
+            t_tx = (L * B * c["xi_s"] + c["xi_d"]) / (k * r)
+            out[int(plan.ids[i])] = (p_compute_w * t_comp
+                                     + p_tx_w * t_tx)
+    return out
+
+
+class SimEngine:
+    """Runs CPSL training end-to-end under simulated wireless dynamics.
+
+    ``model`` names a splittable model ("lenet" or a zoo config); the
+    engine owns (re)building the split at each cut-layer switch. ``dataset``
+    must expose ``cluster_batch(devices, seed=...)`` (see
+    ``data.pipeline.CPSLDataset``); global device ids are mapped onto its
+    shards modulo the shard count (taken from ``n_data_shards`` or the
+    dataset's ``device_indices``), so late arrivals get data too. Without
+    either, ids pass through unmapped — only safe if the dataset accepts
+    arbitrary ids (e.g. ``LMClusterData`` sized for the churn ceiling).
+    """
+
+    def __init__(self, model, dataset, prof: CutProfile, ncfg: NetworkCfg,
+                 dcfg: DynamicsCfg, scfg: SimCfg, ccfg: CPSLConfig,
+                 eval_fn: Optional[Callable] = None,
+                 train: bool = True, n_data_shards: Optional[int] = None):
+        self.model, self.ds, self.prof = model, dataset, prof
+        self.ncfg, self.dcfg, self.scfg, self.ccfg = ncfg, dcfg, scfg, ccfg
+        self.eval_fn = eval_fn
+        self.train = train
+        # the trainer has exactly ccfg.cluster_size device slots per
+        # cluster; a larger controller target would silently truncate
+        # clusters out of the training batches (latency accounting is
+        # unaffected — it always uses true cluster sizes)
+        if train:
+            assert scfg.cluster_size <= ccfg.cluster_size, (
+                f"SimCfg.cluster_size={scfg.cluster_size} exceeds the "
+                f"trainer's CPSLConfig.cluster_size={ccfg.cluster_size}")
+        self.proc = NetworkProcess(ncfg, dcfg)
+        self.controller = TwoTimescaleController(
+            prof, ncfg, ccfg.batch_per_device, ccfg.local_epochs, scfg)
+        self.trace: List[dict] = []
+        self._n_shards = (n_data_shards
+                          or len(getattr(dataset, "device_indices", []))
+                          or None)
+
+    # -- helpers --------------------------------------------------------------
+
+    def _data_shard(self, gid: int) -> int:
+        return gid % self._n_shards if self._n_shards else gid
+
+    def _make_cpsl(self, v: int) -> CPSL:
+        import dataclasses
+        ccfg = dataclasses.replace(self.ccfg, cut_layer=v)
+        return CPSL(make_split_model(self.model, v), ccfg)
+
+    def _batch_fn(self, plan: Plan, rnd: int):
+        K = self.ccfg.cluster_size
+        gclusters = plan.global_clusters()
+
+        def batch_fn(m, l):
+            ids = gclusters[m]
+            # pad short (churned) clusters to the trainer's fixed K slots
+            padded = [self._data_shard(ids[i % len(ids)]) for i in range(K)]
+            b = self.ds.cluster_batch(
+                padded, seed=batch_seed(self.scfg.seed, rnd, m, l))
+            return jax.tree.map(jnp.asarray, b)
+
+        return batch_fn
+
+    def _emit(self, rec: dict):
+        self.trace.append(rec)
+        if self.scfg.trace_path:
+            with open(self.scfg.trace_path, "a") as f:
+                f.write(json.dumps(_jsonable(rec)) + "\n")
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(self.scfg.seed)
+        # fresh trace per run — carrying over records (in memory or on
+        # disk) would interleave stale rounds into downstream recomputation
+        self.trace = []
+        if self.scfg.trace_path:
+            open(self.scfg.trace_path, "w").close()
+        cpsl = None
+        state = None
+        sim_time = 0.0
+        for rnd in range(self.scfg.rounds):
+            events = []
+            net, ids = self.proc.snapshot()
+            if len(ids) == 0:
+                # arrivals must still happen or the network can never
+                # repopulate after hitting zero
+                events += self.proc.sample_arrivals()
+                self._emit({"round": rnd, "skipped": "no active devices",
+                            "events": [e.to_dict() for e in events]})
+                self.proc.evolve()
+                continue
+
+            # 1. large timescale
+            cut_means = None
+            if rnd % self.scfg.epoch_len == 0 or self.controller.v is None:
+                mu_f, mu_snr = self.proc.means_of(ids)
+                v, cut_means = self.controller.select_cut(mu_f, mu_snr, rnd)
+                if self.train and (cpsl is None or cpsl.ccfg.cut_layer != v):
+                    cpsl = self._make_cpsl(v)
+                    key, sub = jax.random.split(key)
+                    state = cpsl.init_state(sub)
+
+            # 2. small timescale
+            plan = self.controller.plan_slot(net, ids, rnd)
+            planned_latency = plan.latency   # optimizer's pre-repair prediction
+
+            # 3. mid-round departures -> stale-decision repair
+            departures = self.proc.sample_departures(rnd)
+            events += departures
+            if departures:
+                plan = self.controller.repair(
+                    plan, net, [e.device for e in departures])
+            if not plan.clusters:
+                events += self.proc.sample_arrivals()
+                self._emit({"round": rnd, "skipped": "all devices departed",
+                            "events": [e.to_dict() for e in events]})
+                self.proc.evolve()
+                continue
+
+            # 4. wireless cost of the executed plan (eqs. 15-25)
+            latency = lt.round_latency(
+                plan.v, plan.clusters, plan.xs, net, self.ncfg, self.prof,
+                self.ccfg.batch_per_device, self.ccfg.local_epochs)
+            sim_time += latency
+
+            # 5. the actual training round
+            rec = {"round": rnd, "v": plan.v, "stale": plan.stale,
+                   "n_active": len(ids),
+                   "ids": ids, "f": net.f, "rate": net.rate,
+                   "clusters": [list(c) for c in plan.clusters],
+                   "clusters_global": plan.global_clusters(),
+                   "xs": [np.asarray(x) for x in plan.xs],
+                   "planned_latency_s": planned_latency,
+                   "latency_s": float(latency),
+                   "sim_time_s": float(sim_time)}
+            if cut_means is not None:
+                rec["cut_means"] = cut_means
+            if self.train:
+                state, metrics = cpsl.run_round(
+                    state, self._batch_fn(plan, rnd),
+                    n_clusters=len(plan.clusters))
+                rec["loss"] = metrics["loss"]
+                if self.eval_fn is not None:
+                    rec["eval"] = self.eval_fn(cpsl, state)
+
+            # 6. energy drain (may trigger depletion departures)
+            joules = device_round_energy(
+                plan, net, self.ncfg, self.prof, self.ccfg.batch_per_device,
+                self.ccfg.local_epochs, self.dcfg.p_compute_w,
+                self.dcfg.p_tx_w)
+            events += self.proc.consume(list(joules), list(joules.values()))
+
+            # 7. churn + fading evolution for the next slot
+            events += self.proc.sample_arrivals()
+            self.proc.evolve()
+
+            rec["events"] = [e.to_dict() for e in events]
+            self._emit(rec)
+        return state, self.trace
+
+
+def recompute_trace_latencies(trace, prof: CutProfile, ncfg: NetworkCfg,
+                              B: int, L: int) -> np.ndarray:
+    """Re-derive each traced round's latency from the recorded network
+    snapshot with ``core.latency.round_latency`` — the acceptance check
+    that the engine's accounting matches the cost model. Accepts either
+    in-memory trace records or parsed JSONL lines."""
+    from repro.core.channel import NetworkState
+    out = []
+    for rec in trace:
+        if rec.get("skipped"):
+            continue
+        net = NetworkState(f=np.asarray(rec["f"], dtype=np.float64),
+                           rate=np.asarray(rec["rate"], dtype=np.float64))
+        out.append(lt.round_latency(
+            rec["v"], rec["clusters"],
+            [np.asarray(x) for x in rec["xs"]], net, ncfg, prof, B, L))
+    return np.asarray(out)

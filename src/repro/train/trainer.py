@@ -35,6 +35,7 @@ from repro.core.compression import compression_ratio
 from repro.core.cpsl import CPSL
 from repro.core.latency import CutProfile
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import batch_seed
 
 
 class SimulatedFailure(RuntimeError):
@@ -134,9 +135,8 @@ class CPSLTrainer:
             clusters, xs, lat = self._plan_round(v, rnd)
 
             def batch_fn(m, l, _clusters=clusters, _rnd=rnd):
-                seed = (self.tcfg.seed * 1_000_003 + _rnd * 971
-                        + m * 31 + l) % (2**31)
-                b = self.ds.cluster_batch(_clusters[m], seed=seed)
+                b = self.ds.cluster_batch(
+                    _clusters[m], seed=batch_seed(self.tcfg.seed, _rnd, m, l))
                 return jax.tree.map(jnp.asarray, b)
 
             state, metrics = self.cpsl.run_round(state, batch_fn,

@@ -3,7 +3,8 @@ custom backward, masks, softcap, GQA grouping."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.models.common import (chunked_attention, naive_attention,
                                  apply_rope)
