@@ -1,0 +1,148 @@
+"""Replicated-planner benchmarks: lockstep multichain Gibbs + fully
+batched SAA vs the looped ``core.resource`` implementations.
+
+Part 1 — batched SAA (Alg. 2) at the paper's N=30, J=8 configuration:
+``saa_cut_selection_batched`` runs the whole (cut x sample x chain) grid
+as one lockstep replica set over ``PartitionBatch``; asserts bit-identical
+``(v_star, means)`` to the looped ``saa_cut_selection`` and a >=5x
+speedup (``PLANNER_MIN_SPEEDUP`` overrides the floor for noisy runners —
+the bit-equality asserts stay strict).
+
+Part 2 — best-of-R solution quality at equal seed: chain 0 reproduces the
+single chain, so best-of-R latency is monotone non-increasing in R.
+
+Part 3 — N-scaling sweep (N=30 -> 200+ devices), previously impractical
+with the nested-Python-loop planner: one multichain Gibbs slot plan per N;
+asserts the N=200 plan completes within ``PLANNER_N200_BUDGET_S``
+(default 10 s).
+
+Writes the JSON result (speedups, latencies, sweep timings) to
+``--out`` / ``$PLANNER_BENCH_JSON`` (default /tmp/bench_planner.json) —
+CI uploads it as an artifact.
+
+    PYTHONPATH=src python -m benchmarks.bench_planner --quick
+    PYTHONPATH=src python -m benchmarks.run --only bench_planner
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import resource as rs
+from repro.core.channel import NetworkCfg, device_means, sample_network
+from repro.core.profile import lenet_profile
+from repro.sim.batched import (gibbs_clustering_multichain,
+                               saa_cut_selection_batched)
+
+B, L = 16, 1
+
+
+def bench_saa(quick: bool, result: dict):
+    """Looped vs batched SAA at the paper's N=30, J=8 config."""
+    ncfg = NetworkCfg(n_devices=30)            # paper §VIII-A: C=30, M=6, K=5
+    prof = lenet_profile()
+    kw = dict(n_samples=8, gibbs_iters=30 if quick else 100, seed=0,
+              cuts=tuple(range(1, 7)))
+    t0 = time.perf_counter()
+    v1, m1 = rs.saa_cut_selection(prof, ncfg, B, L, 6, 5, **kw)
+    t_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    v2, m2 = saa_cut_selection_batched(prof, ncfg, B, L, 6, 5, **kw)
+    t_batch = time.perf_counter() - t0
+    assert v1 == v2 and np.array_equal(m1, m2), \
+        "batched SAA diverged from looped SAA"
+    speedup = t_loop / t_batch
+    print(f"SAA (N=30, J=8, {len(kw['cuts'])} cuts, "
+          f"{kw['gibbs_iters']} Gibbs iters):")
+    print(f"  looped   {t_loop:8.2f} s")
+    print(f"  batched  {t_batch:8.2f} s  ({speedup:6.1f}x)  "
+          f"v*={v2}, means bit-identical")
+    min_speedup = float(os.environ.get("PLANNER_MIN_SPEEDUP", "5"))
+    assert speedup >= min_speedup, \
+        f"planner speedup {speedup:.1f}x < {min_speedup:g}x"
+    result["saa"] = {"n_devices": 30, "n_samples": 8, "cuts": len(kw["cuts"]),
+                     "gibbs_iters": kw["gibbs_iters"], "t_loop_s": t_loop,
+                     "t_batch_s": t_batch, "speedup": speedup,
+                     "v_star": int(v2), "means": m2.tolist()}
+
+
+def bench_best_of_r(quick: bool, result: dict):
+    """Best-of-R at equal seed: monotone non-increasing in R."""
+    ncfg = NetworkCfg(n_devices=30)
+    prof = lenet_profile()
+    net = sample_network(ncfg, *device_means(ncfg, 0),
+                         np.random.default_rng(0))
+    iters = 150 if quick else 400
+    lats, walls = [], []
+    for chains in (1, 2, 4, 8):
+        t0 = time.perf_counter()
+        _, _, lat = gibbs_clustering_multichain(
+            3, net, ncfg, prof, B, L, 6, 5, iters=iters, seed=0,
+            chains=chains)
+        walls.append(time.perf_counter() - t0)
+        lats.append(lat)
+    single = rs.gibbs_clustering(3, net, ncfg, prof, B, L, 6, 5,
+                                 iters=iters, seed=0)[2]
+    assert lats[0] == single, "chain 0 diverged from the looped planner"
+    assert all(a >= b for a, b in zip(lats, lats[1:])), \
+        "best-of-R not monotone in R"
+    print(f"best-of-R Gibbs (N=30, M=6, {iters} iters), D_round:")
+    for chains, lat, w in zip((1, 2, 4, 8), lats, walls):
+        note = " (== looped single chain)" if chains == 1 else ""
+        print(f"  R={chains}:  {lat:8.4f} s   [{w*1e3:7.1f} ms]{note}")
+    result["best_of_r"] = {"iters": iters, "chains": [1, 2, 4, 8],
+                           "latencies_s": lats, "wall_s": walls}
+
+
+def bench_n_scaling(quick: bool, result: dict):
+    """Plan a Gibbs round at N=30 -> 200+ devices (M=N/5 clusters)."""
+    prof = lenet_profile()
+    sweep = (30, 60, 120, 200) if quick else (30, 60, 120, 200, 320)
+    rows = []
+    print("N-scaling sweep (K=5, chains=4, iters=2N):")
+    for n in sweep:
+        ncfg = NetworkCfg(n_devices=n)
+        net = sample_network(ncfg, *device_means(ncfg, 0),
+                             np.random.default_rng(0))
+        t0 = time.perf_counter()
+        clusters, xs, lat = gibbs_clustering_multichain(
+            3, net, ncfg, prof, B, L, n // 5, 5, iters=2 * n, seed=0,
+            chains=4)
+        wall = time.perf_counter() - t0
+        assert sorted(d for c in clusters for d in c) == list(range(n))
+        rows.append({"n_devices": n, "n_clusters": n // 5, "wall_s": wall,
+                     "latency_s": lat})
+        print(f"  N={n:4d}  M={n // 5:3d}  plan {wall:6.2f} s  "
+              f"D_round {lat:8.2f} s")
+        if n == 200:
+            budget = float(os.environ.get("PLANNER_N200_BUDGET_S", "10"))
+            assert wall < budget, \
+                f"N=200 plan took {wall:.1f}s >= {budget:g}s"
+    result["n_scaling"] = rows
+
+
+def main(quick: bool = True, out: str = None):
+    out = out or os.environ.get("PLANNER_BENCH_JSON",
+                                "/tmp/bench_planner.json")
+    result = {"quick": quick}
+    bench_saa(quick, result)
+    bench_best_of_r(quick, result)
+    bench_n_scaling(quick, result)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"results -> {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="small iteration counts (default)")
+    mode.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(quick=not args.full, out=args.out)

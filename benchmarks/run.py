@@ -10,9 +10,9 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (bench_dynamics, fig5_training, fig6_cluster_size,
-                        fig7_cut_layer, fig8_resource, roofline,
-                        table2_latency)
+from benchmarks import (bench_dynamics, bench_planner, fig5_training,
+                        fig6_cluster_size, fig7_cut_layer, fig8_resource,
+                        roofline, table2_latency)
 
 BENCHES = {
     "table2_latency": table2_latency.main,
@@ -22,6 +22,7 @@ BENCHES = {
     "fig6_cluster_size": fig6_cluster_size.main,
     "roofline": roofline.main,
     "bench_dynamics": bench_dynamics.main,
+    "bench_planner": bench_planner.main,
 }
 
 

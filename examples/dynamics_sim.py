@@ -3,10 +3,12 @@
 30 simulated devices with Gauss-Markov correlated fading and compute
 drift, device churn (one scripted departure plus random arrivals), and
 per-device energy budgets. The online two-timescale controller re-selects
-the cut layer (Alg. 2) every ``epoch_len`` rounds and re-runs clustering +
-spectrum allocation (Algs. 3/4, vectorized) every round; departures that
-land mid-round trigger the stale-decision repair path. The run trains the
-paper's LeNet end-to-end and writes a JSONL trace.
+the cut layer (Alg. 2, fully batched SAA) every ``epoch_len`` rounds and
+re-runs clustering + spectrum allocation (Algs. 3/4) every round with
+``gibbs_chains=4`` lockstep Gibbs replicas (best-of-4 plans at ~the cost
+of one — set it to 1 to reproduce the single-chain planner bit-exactly);
+departures that land mid-round trigger the stale-decision repair path.
+The run trains the paper's LeNet end-to-end and writes a JSONL trace.
 
     PYTHONPATH=src python examples/dynamics_sim.py
 """
@@ -36,8 +38,8 @@ def main():
 
     ccfg = CPSLConfig(cluster_size=5, local_epochs=1, batch_per_device=16)
     scfg = SimCfg(rounds=8, epoch_len=4, cluster_size=5, saa_samples=2,
-                  saa_gibbs_iters=20, gibbs_iters=60, cuts=(2, 3, 4),
-                  trace_path=TRACE, seed=0)
+                  saa_gibbs_iters=20, gibbs_iters=60, gibbs_chains=4,
+                  cuts=(2, 3, 4), trace_path=TRACE, seed=0)
     dcfg = DynamicsCfg(rho_snr=0.9, rho_f=0.95,       # correlated dynamics
                        forced_departures={2: (7,)},    # device 7 leaves
                        p_arrive=0.25, min_devices=10,

@@ -188,6 +188,10 @@ class SimCfg:
     saa_samples: int = 3             # J network samples per SAA evaluation
     saa_gibbs_iters: int = 40        # Gibbs iters inside the SAA inner loop
     gibbs_iters: int = 120           # Gibbs iters for the per-slot plan
+    gibbs_chains: int = 1            # lockstep Gibbs replicas per plan
+                                     # (best-of-R; chain 0 == single-chain
+                                     # stream, so 1 reproduces the looped
+                                     # planner bit-exactly)
     cuts: Optional[Tuple[int, ...]] = None  # candidate cut layers (None = all)
     trace_path: Optional[str] = None # JSONL trace destination
     seed: int = 0

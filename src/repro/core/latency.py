@@ -76,41 +76,94 @@ def cluster_latency(v: int, devices: Sequence[int], x: np.ndarray,
 
 class BatchedClusterEvaluator:
     """Vectorized ``cluster_latency`` for one fixed (cut layer, cluster,
-    network draw): hoists every x-independent term at construction, then
-    scores whole (P, K) batches of candidate allocations per call.
+    network draw): the single-cluster (sizes=[K]) special case of
+    :class:`PartitionBatch` — one device row broadcast against whole
+    (P, K) batches of candidate allocations per call.
 
-    Exactness contract: every expression keeps the operand order of
-    ``cluster_latency`` (e.g. ``B*xi_s / (x*r)``, never
-    ``(B*xi_s/r) * (1/x)``), all in float64 — so the evaluated latencies
-    are bit-identical to P scalar calls, and greedy/Gibbs *decisions*
-    (argmins, Metropolis accepts) made on top of them match the looped
+    Exactness contract (inherited from ``PartitionBatch``, which keeps the
+    operand order of ``cluster_latency``): the evaluated latencies are
+    bit-identical to P scalar calls, so greedy/Gibbs *decisions* (argmins,
+    Metropolis accepts) made on top of them match the looped
     implementations exactly. Tests assert this."""
 
     def __init__(self, v: int, devices: Sequence[int], net: NetworkState,
                  ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
                  physical_gradients: bool = False):
-        c = prof.at(v)
         dev = np.asarray(devices)
-        f = net.f[dev] * ncfg.kappa
-        self.r = net.rate[dev]
+        self._pb = PartitionBatch(v, net, ncfg, prof, B, L, [len(dev)],
+                                  dev[None, :],
+                                  physical_gradients=physical_gradients)
+
+    def latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(P, K) candidate allocations -> (P,) cluster latencies D_m."""
+        return self._pb.latencies(xs)
+
+
+class PartitionBatch:
+    """Replicated-partition evaluator: scores R *full* M-cluster partitions
+    — optionally each under its own cut layer and network draw — in a
+    handful of broadcasts.
+
+    Every replica uses the same cluster-size layout ``sizes`` = (K_1..K_M);
+    ``device_idx`` is an (R, N) array of device ids laid out
+    cluster-by-cluster (N = sum(sizes)), and allocations passed to
+    :meth:`latencies` / :meth:`cluster_latencies` follow the same layout.
+    ``v`` is an int (shared cut) or an (R,) array of per-replica cuts;
+    ``net`` arrays are (N_dev,) for a single draw or (S, N_dev) for S
+    stacked draws, with ``net_rows`` (R,) mapping replicas to draws.
+    Broadcasting applies: a single device row (1, N) may be scored against
+    (P, N) candidate allocations and vice versa.
+
+    Exactness contract (same as ``BatchedClusterEvaluator``): every
+    expression keeps the operand order of ``cluster_latency``, all in
+    float64 — per-cluster latencies are bit-identical to scalar calls, and
+    totals accumulate clusters left-to-right so they are bit-identical to
+    the Python ``sum`` in ``round_latency`` and
+    ``core.resource._round_latency_cached``. The multichain planner in
+    ``repro.sim.batched`` relies on this to keep chain 0 of its lockstep
+    Gibbs replicas bit-exact to the looped single-chain path."""
+
+    def __init__(self, v, net: NetworkState, ncfg: NetworkCfg,
+                 prof: CutProfile, B: int, L: int, sizes: Sequence[int],
+                 device_idx: np.ndarray, net_rows=None,
+                 physical_gradients: bool = False):
+        sizes = np.asarray(sizes, dtype=np.int64)
+        dev = np.asarray(device_idx, dtype=np.int64)
+        if dev.ndim == 1:
+            dev = dev[None, :]
+        assert dev.shape[1] == int(sizes.sum()), \
+            "device_idx must be laid out cluster-by-cluster per `sizes`"
+        keys = ("xi_d", "xi_s", "xi_g", "gamma_dF", "gamma_dB",
+                "gamma_sF", "gamma_sB")
+        v_arr = np.asarray(v)
+        c = {k: np.asarray(getattr(prof, k))[v_arr - 1] for k in keys}
+        if v_arr.ndim:                       # per-replica cuts -> columns
+            c = {k: a[:, None] for k, a in c.items()}
+        f_all = np.asarray(net.f, dtype=np.float64)
+        r_all = np.asarray(net.rate, dtype=np.float64)
+        if f_all.ndim == 1:
+            f = f_all[dev] * ncfg.kappa
+            self.r = r_all[dev]
+        else:
+            rows = np.asarray(net_rows, dtype=np.int64)[:, None]
+            f = f_all[rows, dev] * ncfg.kappa
+            self.r = r_all[rows, dev]
         C = ncfg.n_subcarriers
-        K = len(dev)
-        self.K, self.L = K, L
+        self.L, self.M = L, len(sizes)
+        self.starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
         xi_g = c["xi_g"] * (B if physical_gradients else 1.0)
-        # x-independent phase terms
         tau_b = c["xi_d"] / (C * self.r)                 # (15)
         self.tau_d = B * c["gamma_dF"] / f               # (16)
-        self.tau_e = K * B * (c["gamma_sF"] + c["gamma_sB"]) \
-            / (ncfg.f_server * ncfg.kappa)               # (18)
+        self.tau_e = sizes * B * (c["gamma_sF"] + c["gamma_sB"]) \
+            / (ncfg.f_server * ncfg.kappa)               # (18), per cluster
         self.tau_u = B * c["gamma_dB"] / f               # (21)
         self.bd = tau_b + self.tau_d                     # partial sum of (19)
-        # numerators of the x-dependent terms
         self.num_s = B * c["xi_s"]                       # (17)
         self.num_g = xi_g                                # (20)
         self.num_t = c["xi_d"]                           # (23)
 
-    def latencies(self, xs: np.ndarray) -> np.ndarray:
-        """(P, K) candidate allocations -> (P,) cluster latencies D_m."""
+    def cluster_latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(R, N) allocations -> (R, M) per-cluster latencies D_m."""
         xs = np.asarray(xs, dtype=np.float64)
         if xs.ndim == 1:
             xs = xs[None, :]
@@ -119,10 +172,21 @@ class BatchedClusterEvaluator:
         tau_g = self.num_g / xr                          # (20)
         tau_t = self.num_t / xr                          # (23)
         gu = tau_g + self.tau_u
-        d_S = np.max(self.bd + tau_s, axis=1) + self.tau_e           # (19)
-        d_I = np.max(gu + self.tau_d + tau_s, axis=1) + self.tau_e   # (22)
-        d_E = np.max(gu + tau_t, axis=1)                             # (24)
+        mx = np.maximum.reduceat
+        d_S = mx(self.bd + tau_s, self.starts, axis=1) + self.tau_e  # (19)
+        d_I = mx(gu + self.tau_d + tau_s, self.starts, axis=1) \
+            + self.tau_e                                             # (22)
+        d_E = mx(gu + tau_t, self.starts, axis=1)                    # (24)
         return d_S + (self.L - 1) * d_I + d_E
+
+    def latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(R, N) allocations -> (R,) round totals, summed left-to-right
+        over clusters (bit-identical to Python ``sum``, eq. 25)."""
+        per = self.cluster_latencies(xs)
+        total = per[:, 0].copy()
+        for m in range(1, self.M):
+            total = total + per[:, m]
+        return total
 
 
 def cluster_latency_batch(v: int, devices: Sequence[int], xs: np.ndarray,

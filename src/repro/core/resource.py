@@ -208,6 +208,16 @@ def saa_cut_selection(prof: CutProfile, ncfg: NetworkCfg, B: int, L: int,
     per-round latency under Alg. 4 decisions; return argmin and the
     per-cut mean latencies.
 
+    Common random numbers (CRN): sample j's Gibbs run is seeded
+    ``seed + j`` for *every* cut — deliberately, not a bug. Reusing the
+    same clustering trajectories across cuts couples the per-cut mean
+    estimates, so their differences (what the argmin sees) have much lower
+    variance than with independent seeds. The vectorized
+    ``repro.sim.batched.saa_cut_selection_batched`` reproduces exactly
+    this coupling (its (cut, j, chain 0) replicas share the
+    ``default_rng(seed + j)`` stream) and the planner equivalence suite
+    asserts bit-identical ``(v_star, means)`` at ``chains=1``.
+
     ``means_override=(mu_f, mu_snr)`` samples around externally tracked
     device means (the dynamic simulator's current estimate) instead of
     drawing fresh means from ``ncfg``."""

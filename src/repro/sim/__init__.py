@@ -6,21 +6,27 @@ Layers on top of ``repro.core``:
                  generalizes the i.i.d. draws of ``core.channel``.
   batched.py     vectorized candidate-allocation evaluation (bit-identical
                  to the scalar ``core.latency.cluster_latency``) plus fast
-                 greedy/Gibbs built on it.
+                 greedy/Gibbs built on it, and the replicated planner:
+                 lockstep multi-chain Gibbs + fully batched SAA over
+                 ``core.latency.PartitionBatch``.
   controller.py  online two-timescale controller wrapping Algs. 2-4 with a
                  stale-decision fallback for mid-round departures.
   engine.py      round executor coupling controller + latency model + the
                  real ``core.cpsl`` trainer; emits JSONL traces.
 """
-from repro.sim.batched import (BatchedClusterEvaluator,
+from repro.sim.batched import (BatchedClusterEvaluator, MultiChainResult,
+                               PartitionBatch, gibbs_clustering_batched,
+                               gibbs_clustering_multichain,
                                greedy_spectrum_batched,
-                               gibbs_clustering_batched)
+                               saa_cut_selection_batched)
 from repro.sim.controller import Plan, TwoTimescaleController
 from repro.sim.dynamics import DynamicsCfg, Event, NetworkProcess
 from repro.sim.engine import SimEngine
 
 __all__ = [
-    "BatchedClusterEvaluator", "greedy_spectrum_batched",
-    "gibbs_clustering_batched", "Plan", "TwoTimescaleController",
+    "BatchedClusterEvaluator", "PartitionBatch", "MultiChainResult",
+    "greedy_spectrum_batched", "gibbs_clustering_batched",
+    "gibbs_clustering_multichain", "saa_cut_selection_batched",
+    "Plan", "TwoTimescaleController",
     "DynamicsCfg", "Event", "NetworkProcess", "SimEngine",
 ]

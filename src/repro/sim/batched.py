@@ -1,4 +1,4 @@
-"""Vectorized candidate-allocation evaluation for Algs. 3/4.
+"""Vectorized + replicated candidate evaluation for Algs. 2/3/4.
 
 The looped implementations in ``core.resource`` call the scalar
 ``cluster_latency`` once per candidate, each call re-deriving the
@@ -7,19 +7,44 @@ cut-dependent constants. ``core.latency.BatchedClusterEvaluator``
 (P, K) candidate batches with a handful of numpy broadcasts — with a
 bit-exactness contract to the scalar path, so the greedy/Gibbs
 *decisions* built on it below match the looped baselines exactly.
+
+On top of that sits the *replicated planner layer*
+(``core.latency.PartitionBatch``): R full M-cluster partitions — each
+replica optionally under its own cut layer and network draw — are scored
+in a handful of broadcasts, which turns
+
+  * ``gibbs_clustering_multichain``  — R lockstep Gibbs chains (Alg. 4)
+    with independent per-chain RNG streams, returning best-of-R, and
+  * ``saa_cut_selection_batched``    — Alg. 2 with the whole
+    (cut x network-sample x chain) grid run as one lockstep replica set
+
+into batched numpy instead of nested Python loops.
+
+Per-chain RNG-stream layout (the bit-exactness contract): chain 0 draws
+from ``np.random.default_rng(seed)`` — *exactly* the single-chain stream
+of ``core.resource.gibbs_clustering(seed=seed)`` — and chain c > 0 draws
+from ``np.random.default_rng((seed, c))``. Streams are prefix-stable in
+the chain count, so best-of-R latency is monotone non-increasing in R,
+and chain 0 reproduces the looped trajectory (initial permutation, swap
+proposals, Metropolis accepts, history) bit-for-bit.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import resource as rs
 from repro.core.channel import NetworkCfg, NetworkState
-from repro.core.latency import BatchedClusterEvaluator, CutProfile
+from repro.core.latency import (BatchedClusterEvaluator, CutProfile,
+                                PartitionBatch)
 
-__all__ = ["BatchedClusterEvaluator", "greedy_spectrum_batched",
-           "gibbs_clustering_batched", "saa_cut_selection_batched"]
+__all__ = ["BatchedClusterEvaluator", "PartitionBatch",
+           "greedy_spectrum_batched", "gibbs_clustering_batched",
+           "saa_cut_selection_batched", "gibbs_clustering_multichain",
+           "MultiChainResult"]
 
 
 def greedy_spectrum_batched(v: int, devices: Sequence[int],
@@ -55,7 +80,299 @@ def gibbs_clustering_batched(*args, **kw):
     return rs.gibbs_clustering(*args, **kw)
 
 
-def saa_cut_selection_batched(*args, **kw):
-    """Alg. 2 with the vectorized inner Algs. 3/4."""
-    kw.setdefault("spectrum_fn", greedy_spectrum_batched)
-    return rs.saa_cut_selection(*args, **kw)
+# --------------------------------------------------------------------------
+# Replicated planner: lockstep Gibbs chains over PartitionBatch
+# --------------------------------------------------------------------------
+
+def _chain_rng(seed: int, chain: int) -> np.random.Generator:
+    """Per-chain RNG streams (see module docstring): chain 0 is
+    ``default_rng(seed)`` — the single-chain stream — chain c > 0 is
+    ``default_rng((seed, c))``. Prefix-stable in the chain count."""
+    return np.random.default_rng(seed if chain == 0 else (int(seed), chain))
+
+
+def _greedy_group(tasks, net: NetworkState, ncfg: NetworkCfg,
+                  prof: CutProfile, B: int, L: int):
+    """Alg. 3 greedy run in lockstep for G same-size clusters.
+
+    ``tasks``: list of (v, net_row, sorted device tuple) with equal
+    cluster size K. Each of the C-K greedy steps scores all G*K candidate
+    allocations through one ``PartitionBatch`` broadcast; candidate
+    values (and therefore argmin tie-breaks) are bit-identical to the
+    scalar ``core.resource.greedy_spectrum``. Returns [(x, lat)] aligned
+    with the sorted keys."""
+    G, K = len(tasks), len(tasks[0][2])
+    C = ncfg.n_subcarriers
+    assert C >= K, "need at least one subcarrier per device"
+    vs = np.array([t[0] for t in tasks], dtype=np.int64)
+    rows = np.array([t[1] for t in tasks], dtype=np.int64)
+    dev = np.array([t[2] for t in tasks], dtype=np.int64)
+    pb0 = PartitionBatch(vs, net, ncfg, prof, B, L, [K], dev, net_rows=rows)
+    X = np.ones((G, K), dtype=np.int64)
+    cur = pb0.latencies(X)
+    if C == K:
+        return [(X[g].copy(), float(cur[g])) for g in range(G)]
+    eye = np.eye(K, dtype=np.int64)
+    pb = PartitionBatch(np.repeat(vs, K), net, ncfg, prof, B, L, [K],
+                        np.repeat(dev, K, axis=0),
+                        net_rows=np.repeat(rows, K))
+    gi = np.arange(G)
+    for _ in range(C - K):
+        cands = pb.latencies(
+            (X[:, None, :] + eye[None]).reshape(G * K, K)).reshape(G, K)
+        best = np.argmin(cands, axis=1)
+        X[gi, best] += 1
+        cur = cands[gi, best]
+    return [(X[g].copy(), float(cur[g])) for g in range(G)]
+
+
+def _fill_cache(cache: Dict, triples, net, ncfg, prof, B, L) -> None:
+    """Run lockstep greedy for every uncached (v, net_row, cluster-key)
+    triple, grouped by cluster size."""
+    todo = [t for t in dict.fromkeys(triples) if t not in cache]
+    by_k: Dict[int, list] = {}
+    for t in todo:
+        by_k.setdefault(len(t[2]), []).append(t)
+    for tasks in by_k.values():
+        for t, res in zip(tasks, _greedy_group(tasks, net, ncfg, prof, B, L)):
+            cache[t] = res
+
+
+def _aligned_x(cache, v: int, row: int, seg: np.ndarray) -> np.ndarray:
+    """Cached allocation for ``seg``'s cluster, reordered from the sorted
+    cache key to the cluster's own device order (same pairing rule as
+    ``core.resource._round_latency_cached``)."""
+    key = tuple(sorted(seg.tolist()))
+    x_sorted, _ = cache[(v, row, key)]
+    rank = {d: i for i, d in enumerate(key)}
+    return x_sorted[[rank[int(d)] for d in seg]]
+
+
+def _lockstep_gibbs(vs: np.ndarray, net: NetworkState, rows: np.ndarray,
+                    rngs: List[np.random.Generator], ncfg: NetworkCfg,
+                    prof: CutProfile, B: int, L: int, n_clusters: int,
+                    cluster_size: int, iters: int, delta: float,
+                    sizes: Optional[Sequence[int]], track: bool):
+    """R lockstep Gibbs chains (Alg. 4); replica r runs under cut
+    ``vs[r]``, network draw ``net.f[rows[r]]``, RNG ``rngs[r]``.
+
+    All chains share one Alg. 3 cache keyed (v, net_row, cluster); per
+    iteration the <= 2R affected clusters are filled by ``_greedy_group``
+    (the dominant cost, batched through ``PartitionBatch``) and each
+    candidate partition's total is the left-to-right sum of its cached
+    per-cluster latencies — the same accumulation as the looped
+    ``_round_latency_cached``, so each replica's trajectory is
+    bit-identical to ``core.resource.gibbs_clustering(v, net_j,
+    seed-stream)``.
+
+    Returns (best_lats (R,), [(clusters, xs, lat)] per replica, hists)."""
+    R = len(rngs)
+    n_dev = net.f.shape[1]
+    if sizes is not None:
+        assert sum(sizes) == n_dev, "cluster sizes must partition devices"
+        sizes = [int(s) for s in sizes]
+        n_clusters = len(sizes)
+    else:
+        # mirror the looped path's order[m*K:(m+1)*K] slicing, which
+        # needs at least M*K devices to fill every cluster
+        assert n_clusters * cluster_size <= n_dev, \
+            "pass `sizes` when N < n_clusters * cluster_size"
+        sizes = [cluster_size] * n_clusters
+    M = n_clusters
+    bounds = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    N = int(bounds[-1])
+    vs = np.asarray(vs, dtype=np.int64)
+    rows = np.asarray(rows, dtype=np.int64)
+
+    # initial partitions: same permutation slicing as the looped path
+    D = np.empty((R, N), dtype=np.int64)
+    for r, rng in enumerate(rngs):
+        D[r] = rng.permutation(n_dev)[:N]
+
+    cache: Dict = {}
+    segs = [(int(bounds[m]), int(bounds[m + 1])) for m in range(M)]
+
+    def seg_triples(dmat, rsel):
+        return [(int(vs[r]), int(rows[r]), tuple(sorted(dmat[r, s:e].tolist())))
+                for r in rsel for (s, e) in segs]
+
+    def _total(row):
+        # left-to-right float accumulation, exactly _round_latency_cached
+        total = 0.0
+        for lat in row:
+            total += lat
+        return total
+
+    _fill_cache(cache, seg_triples(D, range(R)), net, ncfg, prof, B, L)
+    X = np.empty((R, N), dtype=np.int64)
+    clats = []                       # per-replica cached cluster latencies
+    for r in range(R):
+        row = []
+        for s, e in segs:
+            key = tuple(sorted(D[r, s:e].tolist()))
+            X[r, s:e] = _aligned_x(cache, int(vs[r]), int(rows[r]), D[r, s:e])
+            row.append(cache[(int(vs[r]), int(rows[r]), key)][1])
+        clats.append(row)
+    cur = np.array([_total(row) for row in clats])
+
+    best_lat = cur.copy()
+    best_D, best_X = D.copy(), X.copy()
+    hists = [[float(cur[r])] for r in range(R)] if track else None
+    if M < 2:
+        iters = 0          # nothing to swap
+    dmin = max(delta, 1e-12)
+    for _ in range(iters):
+        props = []
+        for r, rng in enumerate(rngs):
+            m, mp = rng.choice(M, size=2, replace=False)
+            i = int(rng.integers(sizes[m]))
+            j = int(rng.integers(sizes[mp]))
+            props.append((r, int(m), int(mp),
+                          int(bounds[m]) + i, int(bounds[mp]) + j))
+        D_cand, X_cand = D.copy(), X.copy()
+        trips = []
+        for r, m, mp, p, q in props:
+            D_cand[r, p], D_cand[r, q] = D[r, q], D[r, p]
+            for mm in (m, mp):
+                s, e = segs[mm]
+                trips.append((int(vs[r]), int(rows[r]),
+                              tuple(sorted(D_cand[r, s:e].tolist()))))
+        _fill_cache(cache, trips, net, ncfg, prof, B, L)
+        cand_lats = []
+        for r, m, mp, p, q in props:
+            row = list(clats[r])
+            for mm in (m, mp):
+                s, e = segs[mm]
+                key = tuple(sorted(D_cand[r, s:e].tolist()))
+                X_cand[r, s:e] = _aligned_x(cache, int(vs[r]), int(rows[r]),
+                                            D_cand[r, s:e])
+                row[mm] = cache[(int(vs[r]), int(rows[r]), key)][1]
+            cand_lats.append(row)
+        for r, rng in enumerate(rngs):
+            new = _total(cand_lats[r])
+            eps = 1.0 / (1.0 + math.exp(min((new - float(cur[r])) / dmin,
+                                            700.0)))
+            if rng.random() < eps:
+                D[r], X[r], cur[r] = D_cand[r], X_cand[r], new
+                clats[r] = cand_lats[r]
+            if cur[r] < best_lat[r]:
+                best_lat[r] = cur[r]
+                best_D[r], best_X[r] = D[r], X[r]
+            if track:
+                hists[r].append(float(cur[r]))
+
+    results = []
+    for r in range(R):
+        clusters = [[int(d) for d in best_D[r, s:e]] for s, e in segs]
+        xs = [best_X[r, s:e].copy() for s, e in segs]
+        results.append((clusters, xs, float(best_lat[r])))
+    return best_lat, results, hists
+
+
+@dataclass
+class MultiChainResult:
+    """Full output of ``gibbs_clustering_multichain(full=True)``."""
+    clusters: List[List[int]]            # best-of-R partition
+    xs: List[np.ndarray]                 # its per-cluster allocations
+    latency: float                       # its round latency (eq. 25)
+    best_chain: int                      # argmin chain index
+    chain_latencies: np.ndarray          # (R,) per-chain best latencies
+    chain_results: List[Tuple]           # per-chain (clusters, xs, lat)
+    hists: Optional[List[List[float]]] = None   # per-chain, when track=True
+
+
+def gibbs_clustering_multichain(v: int, net: NetworkState, ncfg: NetworkCfg,
+                                prof: CutProfile, B: int, L: int,
+                                n_clusters: int, cluster_size: int,
+                                iters: int = 1000, delta: float = 1e-4,
+                                seed: int = 0, chains: int = 1,
+                                track: bool = False,
+                                sizes: Optional[Sequence[int]] = None,
+                                full: bool = False):
+    """Alg. 4 run as ``chains`` lockstep Gibbs replicas, returning the
+    best-of-R solution.
+
+    Bit-exactness contract: chain 0 draws from ``default_rng(seed)`` and
+    reproduces ``core.resource.gibbs_clustering(..., seed=seed)`` exactly
+    — same initial permutation, proposals, candidate latencies (via
+    ``PartitionBatch``), Metropolis accepts, and tracked history. Chain
+    c > 0 draws from ``default_rng((seed, c))`` (see module docstring),
+    so streams are prefix-stable and best-of-R latency is monotone
+    non-increasing in ``chains`` — at equal seed the multichain result is
+    never worse than the single-chain one.
+
+    Returns ``(clusters, xs, latency)`` of the winning chain, plus the
+    per-chain histories when ``track=True`` (a list of R lists; entry 0
+    matches the single-chain ``track=True`` history). ``full=True``
+    returns a :class:`MultiChainResult` with every chain's best."""
+    assert chains >= 1
+    snet = NetworkState(f=np.asarray(net.f, float)[None, :],
+                        rate=np.asarray(net.rate, float)[None, :])
+    vs = np.full(chains, v, dtype=np.int64)
+    rows = np.zeros(chains, dtype=np.int64)
+    rngs = [_chain_rng(seed, c) for c in range(chains)]
+    lats, results, hists = _lockstep_gibbs(
+        vs, snet, rows, rngs, ncfg, prof, B, L, n_clusters, cluster_size,
+        iters, delta, sizes, track)
+    b = int(np.argmin(lats))
+    clusters, xs, lat = results[b]
+    if full:
+        return MultiChainResult(clusters, xs, lat, b, np.asarray(lats),
+                                results, hists)
+    if track:
+        return clusters, xs, lat, hists
+    return clusters, xs, lat
+
+
+def saa_cut_selection_batched(prof: CutProfile, ncfg: NetworkCfg, B: int,
+                              L: int, n_clusters: int, cluster_size: int,
+                              n_samples: int = 8, gibbs_iters: int = 200,
+                              seed: int = 0,
+                              cuts: Optional[Sequence[int]] = None,
+                              means_override: Optional[Tuple[np.ndarray,
+                                                             np.ndarray]]
+                              = None, sizes: Optional[Sequence[int]] = None,
+                              chains: int = 1, delta: float = 1e-4
+                              ) -> Tuple[int, np.ndarray]:
+    """Alg. 2 with the whole (cut x network-sample x chain) grid run as one
+    set of lockstep Gibbs replicas over ``PartitionBatch`` — no per-cut /
+    per-sample Python loop.
+
+    Same ``(v_star, means)`` contract as ``core.resource.saa_cut_selection``:
+    identical network draws (one ``default_rng(seed + 1)`` stream), and the
+    same common-random-numbers coupling — the replica for (cut v, sample j,
+    chain 0) draws from ``default_rng(seed + j)`` exactly like the looped
+    ``gibbs_clustering(..., seed=seed + j)`` call, for *every* cut. At
+    ``chains=1`` the returned ``v_star`` and per-cut means are bit-identical
+    to the looped implementation (the equivalence suite pins this); with
+    ``chains > 1`` each (cut, sample) cell takes the best-of-R latency, so
+    means can only improve."""
+    if means_override is not None:
+        mu_f, mu_snr = means_override
+    else:
+        mu_f, mu_snr = rs.device_means(ncfg, seed)
+    rng = np.random.default_rng(seed + 1)
+    nets = [rs.sample_network(ncfg, mu_f, mu_snr, rng)
+            for _ in range(n_samples)]
+    cuts = list(cuts) if cuts is not None else list(range(1, prof.n_cuts + 1))
+    snet = NetworkState(f=np.stack([n.f for n in nets]),
+                        rate=np.stack([n.rate for n in nets]))
+    vs, rows, rngs = [], [], []
+    for v in cuts:
+        for j in range(n_samples):
+            for c in range(chains):
+                vs.append(v)
+                rows.append(j)
+                rngs.append(_chain_rng(seed + j, c))
+    lats, _, _ = _lockstep_gibbs(
+        np.asarray(vs), snet, np.asarray(rows), rngs, ncfg, prof, B, L,
+        n_clusters, cluster_size, gibbs_iters, delta, sizes, track=False)
+    lats = np.asarray(lats, float).reshape(len(cuts), n_samples, chains)
+    means = np.zeros(len(cuts))
+    for ci in range(len(cuts)):
+        tot = 0.0
+        for j in range(n_samples):
+            tot += min(float(l) for l in lats[ci, j])    # best-of-chains
+        means[ci] = tot / n_samples
+    v_star = cuts[int(np.argmin(means))]
+    return v_star, means

@@ -27,7 +27,9 @@ from repro.configs.base import SimCfg
 from repro.core import resource as rs
 from repro.core.channel import NetworkCfg, NetworkState
 from repro.core.latency import CutProfile, cluster_latency
-from repro.sim.batched import greedy_spectrum_batched
+from repro.sim.batched import (gibbs_clustering_multichain,
+                               greedy_spectrum_batched,
+                               saa_cut_selection_batched)
 
 
 def balanced_sizes(n: int, k: int) -> List[int]:
@@ -69,11 +71,16 @@ class TwoTimescaleController:
 
     def select_cut(self, mu_f: np.ndarray, mu_snr: np.ndarray, slot: int
                    ) -> Tuple[int, np.ndarray]:
-        """SAA cut selection around the current population means."""
+        """SAA cut selection around the current population means.
+
+        Runs the replicated ``saa_cut_selection_batched`` — the whole
+        (cut x sample x chain) grid in lockstep, ``scfg.gibbs_chains``
+        chains per cell — which at ``gibbs_chains=1`` is bit-identical to
+        the looped Alg. 2. A custom ``spectrum_fn`` falls back to the
+        looped path (the replicated evaluator hard-codes Alg. 3)."""
         n = len(mu_f)
         sizes = balanced_sizes(n, self.scfg.cluster_size)
-        v, means = rs.saa_cut_selection(
-            self.prof, self._ncfg_for(n), self.B, self.L,
+        kw = dict(
             n_clusters=len(sizes), cluster_size=max(sizes),
             n_samples=self.scfg.saa_samples,
             gibbs_iters=self.scfg.saa_gibbs_iters,
@@ -83,7 +90,15 @@ class TwoTimescaleController:
             # bit-identical to the realized network — a clairvoyance leak
             seed=self.scfg.seed + 7919 * slot + 104_729,
             cuts=self.scfg.cuts, means_override=(mu_f, mu_snr),
-            sizes=sizes, spectrum_fn=self.spectrum_fn)
+            sizes=sizes)
+        if self.spectrum_fn is greedy_spectrum_batched:
+            v, means = saa_cut_selection_batched(
+                self.prof, self._ncfg_for(n), self.B, self.L,
+                chains=max(1, self.scfg.gibbs_chains), **kw)
+        else:
+            v, means = rs.saa_cut_selection(
+                self.prof, self._ncfg_for(n), self.B, self.L,
+                spectrum_fn=self.spectrum_fn, **kw)
         self.v = v
         return v, means
 
@@ -94,14 +109,24 @@ class TwoTimescaleController:
         assert self.v is not None, "select_cut must run before plan_slot"
         n = len(ids)
         sizes = balanced_sizes(n, self.scfg.cluster_size)
-        clusters, xs, lat = rs.gibbs_clustering(
-            self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
-            n_clusters=len(sizes), cluster_size=max(sizes),
-            iters=self.scfg.gibbs_iters,
-            # distinct namespace from both the NetworkProcess streams and
-            # select_cut's SAA stream (see the offset comment there)
-            seed=self.scfg.seed + slot + 53_639,
-            sizes=sizes, spectrum_fn=self.spectrum_fn)
+        # distinct namespace from both the NetworkProcess streams and
+        # select_cut's SAA stream (see the offset comment there)
+        seed = self.scfg.seed + slot + 53_639
+        chains = max(1, self.scfg.gibbs_chains)
+        if chains > 1 and self.spectrum_fn is greedy_spectrum_batched:
+            # best-of-R lockstep chains; chain 0 is the single-chain
+            # stream, so this only ever improves on the chains=1 plan
+            clusters, xs, lat = gibbs_clustering_multichain(
+                self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
+                n_clusters=len(sizes), cluster_size=max(sizes),
+                iters=self.scfg.gibbs_iters, seed=seed, chains=chains,
+                sizes=sizes)
+        else:
+            clusters, xs, lat = rs.gibbs_clustering(
+                self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
+                n_clusters=len(sizes), cluster_size=max(sizes),
+                iters=self.scfg.gibbs_iters, seed=seed,
+                sizes=sizes, spectrum_fn=self.spectrum_fn)
         return Plan(v=self.v, clusters=[list(c) for c in clusters],
                     ids=np.asarray(ids), xs=[np.asarray(x) for x in xs],
                     latency=float(lat))

@@ -3,7 +3,9 @@
 Each round (paper Alg. 1):
   1. draw the network state (device compute + channels),
   2. small-timescale resource management: Gibbs clustering + greedy
-     spectrum (Alg. 3/4) — or fixed/random clustering,
+     spectrum (Alg. 3/4), multi-chain best-of-R Gibbs ("gibbs-mc", via
+     the replicated planner in ``repro.sim.batched``) — or fixed/random
+     clustering,
   3. run intra-cluster epochs + FedAvg per cluster, sequentially,
   4. accumulate the *simulated wireless latency* of the round (eqs. 15-25)
      next to the measured wall-clock,
@@ -16,6 +18,7 @@ checkpoint before exit (preemption-safe).
 """
 from __future__ import annotations
 
+import copy
 import json
 import os
 import signal
@@ -49,8 +52,10 @@ class TrainerCfg:
     ckpt_dir: str = "/tmp/repro_ckpt"
     keep: int = 3
     async_ckpt: bool = True
-    resource_mgmt: str = "gibbs"      # gibbs | random | heuristic | fixed
+    resource_mgmt: str = "gibbs"      # gibbs | gibbs-mc | random | heuristic | fixed
     gibbs_iters: int = 200
+    gibbs_chains: int = 4             # lockstep replicas for "gibbs-mc"
+                                      # (best-of-R; chain 0 == "gibbs")
     fail_at_round: Optional[int] = None
     log_path: Optional[str] = None
     seed: int = 0
@@ -66,6 +71,16 @@ class CPSLTrainer:
         self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep,
                                  async_save=tcfg.async_ckpt)
         self.mu_f, self.mu_snr = device_means(ncfg, tcfg.seed)
+        # upload compression shrinks xi_d on the DMT uplink; the shrunk
+        # profile is cut-independent, so build it once instead of per round
+        cr = compression_ratio(cpsl.ccfg.compress_uploads,
+                               cpsl.ccfg.compress_topk)
+        if cr < 1.0:
+            prof2 = copy.copy(prof)
+            prof2.xi_d = prof.xi_d * cr
+            self._prof_compressed: Optional[CutProfile] = prof2
+        else:
+            self._prof_compressed = None
         self.history: List[dict] = []
         self._stop = False
         try:
@@ -88,6 +103,15 @@ class CPSLTrainer:
                 v, net, self.ncfg, self.prof, self.cpsl.ccfg.batch_per_device,
                 self.cpsl.ccfg.local_epochs, M, K,
                 iters=self.tcfg.gibbs_iters, seed=self.tcfg.seed + rnd)
+        elif kind == "gibbs-mc":
+            # best-of-R lockstep chains (chain 0 == the "gibbs" stream, so
+            # this never plans worse than "gibbs" at the same seed)
+            from repro.sim.batched import gibbs_clustering_multichain
+            clusters, xs, lat = gibbs_clustering_multichain(
+                v, net, self.ncfg, self.prof, self.cpsl.ccfg.batch_per_device,
+                self.cpsl.ccfg.local_epochs, M, K,
+                iters=self.tcfg.gibbs_iters, seed=self.tcfg.seed + rnd,
+                chains=max(1, self.tcfg.gibbs_chains))
         elif kind == "heuristic":
             clusters, xs, lat = rs.heuristic_clustering(
                 v, net, self.ncfg, self.prof,
@@ -99,14 +123,9 @@ class CPSLTrainer:
                 self.cpsl.ccfg.batch_per_device,
                 self.cpsl.ccfg.local_epochs, M, K,
                 seed=(0 if kind == "fixed" else self.tcfg.seed + rnd))
-        # upload compression shrinks xi_d on the DMT uplink
-        cr = compression_ratio(self.cpsl.ccfg.compress_uploads,
-                               self.cpsl.ccfg.compress_topk)
-        if cr < 1.0:
-            import copy
-            prof2 = copy.copy(self.prof)
-            prof2.xi_d = self.prof.xi_d * cr
-            lat = lt.round_latency(v, clusters, xs, net, self.ncfg, prof2,
+        if self._prof_compressed is not None:
+            lat = lt.round_latency(v, clusters, xs, net, self.ncfg,
+                                   self._prof_compressed,
                                    self.cpsl.ccfg.batch_per_device,
                                    self.cpsl.ccfg.local_epochs)
         return clusters, xs, lat
