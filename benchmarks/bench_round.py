@@ -1,0 +1,214 @@
+"""Fused-round benchmark: ``CPSL.run_round_fused`` vs the looped
+``run_round`` at the paper's N=30, M=6, K=5 LeNet configuration, plus a
+cluster-count sweep.
+
+Three timed variants, so the speedup decomposes honestly:
+
+  looped          ``run_round`` as shipped: vmapped K-client device pass,
+                  one jit dispatch per (cluster, epoch) + per-cluster
+                  FedAvg, host-side numpy batch gather, blocking
+                  ``float(mean(loss))`` sync every round.
+  looped+unroll   same orchestration with ``unroll_clients=True`` —
+                  isolates the step-lowering win (jax.vmap over
+                  per-client weights lowers conv grads to grouped
+                  convolutions, which XLA:CPU runs on its naive emitter).
+  fused           ``run_round_fused``: the whole round as ONE donated jit
+                  (scan over clusters, epochs unrolled in the body),
+                  device-resident dataset with in-jit index-table gather,
+                  FedAvg folded in, metrics synced once per round.
+
+Asserts fused >= ``ROUND_MIN_SPEEDUP`` (default 3) x looped steps/sec at
+the paper config (observed ~11x on 2 CPU cores), and that one fused round
+reproduces the looped+unroll round at the same seeds to a few ULPs per
+leaf (the timing floor is env-overridable for noisy runners; the
+equivalence assert stays strict — the full suite lives in
+tests/test_fused_round.py).
+
+Writes the JSON result to ``--out`` / ``$ROUND_BENCH_JSON`` (default
+/tmp/bench_round.json) — CI uploads it as an artifact.
+
+    PYTHONPATH=src python -m benchmarks.bench_round --quick
+    PYTHONPATH=src python -m benchmarks.run --only bench_round
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CPSLConfig
+from repro.core.cpsl import CPSL
+from repro.core.splitting import make_split_model
+from repro.data.pipeline import (CPSLDataset, DeviceResidentDataset,
+                                 batch_seed)
+from repro.data.synthetic import non_iid_split, synthetic_mnist
+
+B, L, CUT = 16, 2, 3
+ULP = float(np.finfo(np.float32).eps)
+
+
+def _setup(n_clusters, cluster_size, **ccfg_kw):
+    n_devices = n_clusters * cluster_size
+    xtr, ytr, _, _ = synthetic_mnist(max(2000, 40 * n_devices), 100, seed=0)
+    shards = non_iid_split(ytr, n_devices=n_devices,
+                           samples_per_device=180, seed=0)
+    ds = CPSLDataset(xtr, ytr, shards, batch=B)
+    ccfg = CPSLConfig(cut_layer=CUT, n_clusters=n_clusters,
+                      cluster_size=cluster_size, local_epochs=L,
+                      batch_per_device=B, **ccfg_kw)
+    cp = CPSL(make_split_model("lenet", CUT), ccfg)
+    clusters = [list(range(m * cluster_size, (m + 1) * cluster_size))
+                for m in range(n_clusters)]
+    return cp, ds, clusters
+
+
+def _run_looped(cp, ds, clusters, state, rnd):
+    sizes = np.stack([ds.data_sizes(c) for c in clusters])
+
+    def batch_fn(m, l):
+        b = ds.cluster_batch(clusters[m], seed=batch_seed(0, rnd, m, l))
+        return jax.tree.map(jnp.asarray, b)
+
+    return cp.run_round(state, batch_fn, n_clusters=len(clusters),
+                        data_sizes=sizes)
+
+
+def _run_fused(cp, dsd, clusters, state, rnd):
+    idx = dsd.round_index_table(clusters, 0, rnd, L)
+    return cp.run_round_fused(state, dsd.data, idx,
+                              dsd.cluster_weights(clusters))
+
+
+def _time_rounds(run_one, state, rounds):
+    """Time `rounds` rounds (the caller warmed up round 0); returns
+    (seconds per round, final state)."""
+    jax.block_until_ready(state["dev"])
+    t0 = time.perf_counter()
+    for rnd in range(1, rounds + 1):
+        state, _ = run_one(state, rnd)
+    jax.block_until_ready(state["dev"])
+    return (time.perf_counter() - t0) / rounds, state
+
+
+def bench_paper_config(quick: bool, result: dict):
+    """N=30, M=6, K=5 (paper §VIII-A) with L=2 local epochs."""
+    M, K = 6, 5
+    rounds = 2 if quick else 5
+    steps = M * L
+    rows = {}
+    for name, unroll, fused in (("looped", False, False),
+                                ("looped+unroll", True, False),
+                                ("fused", True, True)):
+        cp, ds, clusters = _setup(M, K, unroll_clients=unroll)
+        state = cp.init_state(jax.random.PRNGKey(0))
+        if fused:
+            dsd = DeviceResidentDataset.from_dataset(ds)
+            run_one = lambda s, r: _run_fused(cp, dsd, clusters, s, r)  # noqa: E731
+        else:
+            run_one = lambda s, r: _run_looped(cp, ds, clusters, s, r)  # noqa: E731
+        t_compile = time.perf_counter()
+        state, _ = run_one(state, 0)                  # warmup/compile
+        jax.block_until_ready(state["dev"])
+        t_compile = time.perf_counter() - t_compile
+        sec, _ = _time_rounds(run_one, state, rounds)
+        rows[name] = {"s_per_round": sec, "steps_per_s": steps / sec,
+                      "compile_s": t_compile}
+        print(f"  {name:14s} {sec*1e3:8.0f} ms/round "
+              f"({steps / sec:6.1f} steps/s, first-call {t_compile:.1f} s)")
+
+    speedup = rows["fused"]["steps_per_s"] / rows["looped"]["steps_per_s"]
+    orches = (rows["fused"]["steps_per_s"]
+              / rows["looped+unroll"]["steps_per_s"])
+    print(f"  fused vs looped:        {speedup:5.1f}x")
+    print(f"  fused vs looped+unroll: {orches:5.2f}x (orchestration only)")
+    floor = float(os.environ.get("ROUND_MIN_SPEEDUP", "3"))
+    assert speedup >= floor, \
+        f"fused-round speedup {speedup:.1f}x < {floor:g}x"
+    result["paper_config"] = {"n_devices": M * K, "n_clusters": M,
+                              "cluster_size": K, "local_epochs": L,
+                              "batch": B, "rounds": rounds,
+                              "variants": rows, "speedup": speedup,
+                              "speedup_vs_unrolled_loop": orches}
+
+
+def bench_equivalence(result: dict):
+    """One round, same seeds: fused must reproduce looped+unroll to a few
+    ULPs per leaf (ints bit-exact). Strict regardless of runner noise."""
+    M, K = 6, 5
+    cp, ds, clusters = _setup(M, K, unroll_clients=True)
+    dsd = DeviceResidentDataset.from_dataset(ds)
+    s_l, m_l = _run_looped(cp, ds, clusters,
+                           cp.init_state(jax.random.PRNGKey(0)), 0)
+    s_f, m_f = _run_fused(cp, dsd, clusters,
+                          cp.init_state(jax.random.PRNGKey(0)), 0)
+    worst = 0.0
+    for a, b in zip(jax.tree.leaves(s_l), jax.tree.leaves(s_f),
+                    strict=True):
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            tol = 32 * ULP * max(1.0, float(jnp.abs(a).max()))
+            d = float(jnp.abs(a - b).max())
+            worst = max(worst, d)
+            assert d <= tol, f"fused diverged: {d} > {tol}"
+        else:
+            assert jnp.array_equal(a, b)
+    assert abs(m_l["loss"] - float(m_f["loss"])) < 1e-6
+    print(f"  equivalence: max |leaf diff| {worst:.2e} "
+          f"(loss {m_l['loss']:.6f} == {float(m_f['loss']):.6f})")
+    result["equivalence"] = {"max_leaf_diff": worst,
+                             "loss_looped": m_l["loss"],
+                             "loss_fused": float(m_f["loss"])}
+
+
+def bench_cluster_sweep(quick: bool, result: dict):
+    """Fused rounds across cluster counts (K=5, N=5M): the whole-round
+    jit scales linearly in M with no per-step dispatch growth."""
+    sweep = (2, 6, 10) if quick else (2, 6, 10, 15)
+    rounds = 2 if quick else 3
+    rows = []
+    for M in sweep:
+        cp, ds, clusters = _setup(M, 5, unroll_clients=True)
+        dsd = DeviceResidentDataset.from_dataset(ds)
+        state = cp.init_state(jax.random.PRNGKey(0))
+        run_one = lambda s, r: _run_fused(cp, dsd, clusters, s, r)  # noqa: E731
+        t0 = time.perf_counter()
+        state, _ = run_one(state, 0)
+        jax.block_until_ready(state["dev"])
+        compile_s = time.perf_counter() - t0
+        sec, _ = _time_rounds(run_one, state, rounds)
+        rows.append({"n_clusters": M, "n_devices": 5 * M,
+                     "s_per_round": sec, "steps_per_s": M * L / sec,
+                     "compile_s": compile_s})
+        print(f"  M={M:3d} (N={5*M:3d}): {sec*1e3:8.0f} ms/round "
+              f"({M * L / sec:6.1f} steps/s, compile {compile_s:.1f} s)")
+    result["cluster_sweep"] = rows
+
+
+def main(quick: bool = True, out: str = None):
+    out = out or os.environ.get("ROUND_BENCH_JSON", "/tmp/bench_round.json")
+    result = {"quick": quick}
+    print(f"fused round vs looped round (paper N=30, M=6, K=5, B={B}, "
+          f"L={L}, LeNet cut {CUT}):")
+    bench_paper_config(quick, result)
+    bench_equivalence(result)
+    print("cluster-count sweep (fused):")
+    bench_cluster_sweep(quick, result)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"results -> {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="fewer timed rounds (default)")
+    mode.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(quick=not args.full, out=args.out)

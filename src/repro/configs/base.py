@@ -143,6 +143,20 @@ class CPSLConfig:
     momentum: float = 0.0
     weight_decay: float = 0.0
     fused_step: bool = True          # fused autodiff vs explicit 2-phase protocol
+    fused_round: bool = False        # whole-round lax.scan path: trainers use
+                                     # CPSL.run_round_fused (device-resident
+                                     # data, in-jit batch gather, FedAvg folded
+                                     # into the scan) instead of per-step jits
+    fused_round_unroll: int = 0      # scan unroll for the fused round; 0 = full
+                                     # unroll (XLA:CPU lowers conv grads inside
+                                     # while-loop bodies to its naive emitter,
+                                     # ~40x slower — measured in bench_round)
+    unroll_clients: bool = False     # trace-time unroll of the K-client device
+                                     # pass instead of jax.vmap: vmap over
+                                     # per-client weights lowers conv grads to
+                                     # grouped convolutions (~10x slower on
+                                     # XLA:CPU); ULP-level lowering differences
+                                     # vs the vmapped form (tested)
     microbatches: int = 1            # grad-accumulation splits of B
     share_device_params: bool = False  # L==1 fast path (beyond-paper)
     straggler_dropout: float = 0.0   # fraction of clients allowed to miss FedAvg

@@ -13,13 +13,20 @@ import jax.numpy as jnp
 
 
 def topk_mask(x: jnp.ndarray, ratio: float) -> jnp.ndarray:
-    """Keep the top-`ratio` fraction of entries by magnitude."""
+    """Keep exactly the top-`ratio` fraction of entries by magnitude.
+
+    Scatters the ``jax.lax.top_k`` indices rather than thresholding:
+    ``|x| >= thresh`` keeps MORE than k entries on ties (quantized or
+    zero-heavy deltas), which breaks the ``compression_ratio`` accounting
+    the latency model prices the uplink with. ``top_k`` breaks ties by
+    index, so at most k entries are non-zero."""
     if x.ndim == 0:
         return x
-    flat = jnp.abs(x.reshape(-1))
+    flat = x.reshape(-1)
     k = max(int(ratio * flat.size), 1)
-    thresh = jax.lax.top_k(flat, k)[0][-1]
-    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
 
 
 def compress_topk(delta, ratio: float):

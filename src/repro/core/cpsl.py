@@ -15,6 +15,20 @@ Two train-step implementations:
                   device BP. Bit-identical updates (tested); used to
                   demonstrate faithfulness and to price the phases.
 
+Two round orchestrations:
+  - ``run_round``:       the readable reference — one jitted step per
+                         (cluster, local epoch) plus one jitted FedAvg per
+                         cluster, batches gathered host-side.
+  - ``run_round_fused``: the performance path — the whole round is ONE
+                         donated jit (``lax.scan`` over the cluster axis,
+                         local epochs unrolled in the body) with
+                         device-resident data gathered in-jit and FedAvg
+                         folded in at cluster boundaries. Reproduces
+                         ``run_round`` at the same seeds and lowering:
+                         ints/rng bit-exact, floats ULP-equal per leaf
+                         (tests/test_fused_round.py); see
+                         ``CPSLConfig.fused_round`` / ``unroll_clients``.
+
 Vanilla SL is CPSL with cluster_size=1 / n_clusters=N (paper §III). FL is
 the v=V degenerate case (`FLTrainer`).
 """
@@ -76,6 +90,23 @@ class CPSL:
 
     # -- loss ---------------------------------------------------------------
 
+    def _clients_unrolled(self, dev, batch):
+        """Trace-time unroll of the K-client device pass (same math as
+        ``jax.vmap(device_apply)``, stacked in client order).
+
+        ``jax.vmap`` over per-client weights lowers the device conv
+        gradients to grouped convolutions, which XLA:CPU executes on its
+        naive emitter — ~10x slower than the K plain convolutions this
+        unrolled form emits (measured in benchmarks/bench_round.py).
+        Results match the vmapped lowering to ULP (tested); TPU/GPU are
+        indifferent, so ``unroll_clients`` stays off by default."""
+        K = jax.tree.leaves(dev)[0].shape[0]
+        outs = [self.split.device_apply(jax.tree.map(lambda t: t[k], dev),
+                                        jax.tree.map(lambda t: t[k], batch))
+                for k in range(K)]
+        return (jnp.stack([o[0] for o in outs]),
+                jnp.stack([o[1] for o in outs]))
+
     def _total_loss(self, dev, srv, batch):
         """batch leaves: (K, B, ...). Returns (scalar, metrics)."""
         if self.ccfg.share_device_params:
@@ -83,11 +114,15 @@ class CPSL:
             dev0 = jax.tree.map(lambda t: t[0], dev)
             smashed, aux_d = self.split.device_apply(dev0, flat)
         else:
-            K = jax.tree.leaves(dev)[0].shape[0]
-            ax = pt.spmd_client_axes(K)
-            with pt.exclude_axes(ax):
-                smashed, aux_d = jax.vmap(
-                    self.split.device_apply, spmd_axis_name=ax)(dev, batch)
+            if self.ccfg.unroll_clients:
+                smashed, aux_d = self._clients_unrolled(dev, batch)
+            else:
+                K = jax.tree.leaves(dev)[0].shape[0]
+                ax = pt.spmd_client_axes(K)
+                with pt.exclude_axes(ax):
+                    smashed, aux_d = jax.vmap(
+                        self.split.device_apply, spmd_axis_name=ax)(dev,
+                                                                    batch)
             # eq. (5): concatenate client smashed data into the server batch
             smashed = smashed.reshape((-1,) + smashed.shape[2:])
             aux_d = aux_d.mean()
@@ -158,9 +193,12 @@ class CPSL:
         # Phase 1 (paper steps 3, eq. 4): device FP -> smashed data
         Kc = jax.tree.leaves(state["dev"])[0].shape[0]
         ax = pt.spmd_client_axes(Kc)
-        with pt.exclude_axes(ax):
-            smashed, _ = jax.vmap(split.device_apply,
-                                  spmd_axis_name=ax)(state["dev"], batch)
+        if self.ccfg.unroll_clients:
+            smashed, _ = self._clients_unrolled(state["dev"], batch)
+        else:
+            with pt.exclude_axes(ax):
+                smashed, _ = jax.vmap(split.device_apply,
+                                      spmd_axis_name=ax)(state["dev"], batch)
         K, B = smashed.shape[:2]
         smashed_flat = smashed.reshape((-1,) + smashed.shape[2:])
         flat = _flat(batch)
@@ -183,9 +221,16 @@ class CPSL:
             _, vjp = jax.vjp(lambda q: split.device_apply(q, b)[0], dp)
             return vjp(g)[0]
 
-        with pt.exclude_axes(ax):
-            g_dev = jax.vmap(dev_bwd, spmd_axis_name=ax)(state["dev"],
-                                                         batch, g_smashed)
+        if self.ccfg.unroll_clients:
+            gs = [dev_bwd(jax.tree.map(lambda t: t[k], state["dev"]),
+                          jax.tree.map(lambda t: t[k], batch), g_smashed[k])
+                  for k in range(Kc)]
+            g_dev = jax.tree.map(lambda *ts: jnp.stack(ts), *gs)
+        else:
+            with pt.exclude_axes(ax):
+                g_dev = jax.vmap(dev_bwd, spmd_axis_name=ax)(state["dev"],
+                                                             batch,
+                                                             g_smashed)
         new_dev, dev_opt = self.dev_opt.step(g_dev, state["dev_opt"],
                                              state["dev"], state["step"])
         state = dict(state, dev=new_dev, dev_opt=dev_opt, srv=new_srv,
@@ -202,11 +247,23 @@ class CPSL:
 
     # -- aggregation (eq. 8) --------------------------------------------------
 
-    @functools.partial(jax.jit, static_argnums=0)
-    def _fedavg(self, state, weights):
-        dev = state["dev"]
+    def fedavg_impl(self, state, weights):
+        """Pure eq. (8) aggregation, jit-safe (the fused round folds it
+        into the scan): straggler dropout drawn from the carried rng,
+        optional upload compression with error feedback, then the
+        data-size-weighted mean broadcast back to every client row."""
         ccfg = self.ccfg
+        w = weights.astype(jnp.float32)
+        if ccfg.straggler_dropout > 0:
+            rng, sub = jax.random.split(state["rng"])
+            keep = jax.random.bernoulli(
+                sub, 1.0 - ccfg.straggler_dropout, w.shape)
+            # never drop everyone
+            keep = keep.at[0].set(True)
+            w = w * keep
+            state = dict(state, rng=rng)
 
+        dev = state["dev"]
         if ccfg.compress_uploads != "none":
             ref = jax.tree.map(lambda t: t[:1], dev)   # broadcast model
             delta = jax.tree.map(lambda t, r: t - r, dev, ref)
@@ -216,45 +273,129 @@ class CPSL:
             state = dict(state, ef=ef)
 
         def avg(t):
-            w = weights.astype(jnp.float32)
-            w = w / jnp.maximum(w.sum(), 1e-12)
-            m = jnp.tensordot(w, t.astype(jnp.float32), axes=(0, 0))
+            ww = w / jnp.maximum(w.sum(), 1e-12)
+            m = jnp.tensordot(ww, t.astype(jnp.float32), axes=(0, 0))
             return jnp.broadcast_to(m[None].astype(t.dtype), t.shape)
 
         new_dev = jax.tree.map(avg, dev)
         return dict(state, dev=new_dev)
 
+    @functools.partial(jax.jit, static_argnums=0)
+    def _fedavg(self, state, weights):
+        return self.fedavg_impl(state, weights)
+
     def fedavg(self, state, data_sizes: Optional[jnp.ndarray] = None):
-        K = self.ccfg.cluster_size
+        """eq. (8): weights are the per-client local data sizes |D_{m,k}|
+        (uniform when ``data_sizes`` is None)."""
         if self.ccfg.share_device_params:
             return state   # single shared device model: nothing to average
-        w = (jnp.ones((K,)) if data_sizes is None
+        K = self.ccfg.cluster_size
+        w = (jnp.ones((K,), jnp.float32) if data_sizes is None
              else jnp.asarray(data_sizes, jnp.float32))
-        if self.ccfg.straggler_dropout > 0:
-            rng, sub = jax.random.split(state["rng"])
-            keep = jax.random.bernoulli(
-                sub, 1.0 - self.ccfg.straggler_dropout, (K,))
-            # never drop everyone
-            keep = keep.at[0].set(True)
-            w = w * keep
-            state = dict(state, rng=rng)
         return self._fedavg(state, w)
 
     # -- round orchestration (Alg. 1 lines 2-24) ------------------------------
 
     def run_round(self, state, batch_fn: Callable[[int, int], dict],
-                  n_clusters: Optional[int] = None) -> tuple:
+                  n_clusters: Optional[int] = None,
+                  data_sizes=None) -> tuple:
         """batch_fn(m, l) -> batch with (K, B, ...) leaves for cluster m,
-        local epoch l. Clusters run sequentially (inter-cluster, eq. 9)."""
+        local epoch l. Clusters run sequentially (inter-cluster, eq. 9).
+        ``data_sizes``: optional (M, K) per-client local dataset sizes for
+        the eq. (8) weighting (uniform when None)."""
         M = n_clusters or self.ccfg.n_clusters
         metrics = []
         for m in range(M):
             for l in range(self.ccfg.local_epochs):
                 state, mt = self.cluster_step(state, batch_fn(m, l))
                 metrics.append(mt)
-            state = self.fedavg(state)
+            state = self.fedavg(
+                state, None if data_sizes is None else data_sizes[m])
         loss = float(jnp.mean(jnp.stack([m["loss"] for m in metrics])))
         return state, {"loss": loss}
+
+    # -- fused round (single donated jit over the (M, L) grid) ---------------
+
+    def run_round_fused(self, state, data, idx, weights=None) -> tuple:
+        """One CPSL round as a single donated jit: a ``jax.lax.scan`` over
+        the cluster axis (local epochs unrolled in the body) with FedAvg
+        folded in at each cluster boundary.
+
+        ``data``     dict of device-resident dataset arrays, leading dim =
+                     total sample count (``DeviceResidentDataset.data``).
+        ``idx``      (M, L, K, B) int32 global sample indices — the exact
+                     draws the looped path's ``cluster_batch`` would make
+                     (``DeviceResidentDataset.round_index_table``); batches
+                     are gathered from ``data`` inside the jit, so the
+                     round runs with no host transfer in the loop.
+        ``weights``  (M, K) eq.-8 data sizes (uniform when None).
+
+        Contract (tests/test_fused_round.py): at identical seeds and the
+        same ``unroll_clients`` lowering, the fused round reproduces the
+        looped ``run_round`` — batches, rng stream, and step counter
+        bit-for-bit; float leaves (params, optimizer state, error
+        feedback, losses) ULP-equal per leaf (XLA:CPU emits conv/dot
+        gradients with context-dependent fma contraction inside the
+        single fused program, so last-ULP drift vs the separate looped
+        jits is expected — measured <= 0.3 ULP after 3 paper-config
+        rounds) — for both the ``fused`` and ``protocol`` step modes.
+        Metrics come back as device arrays (``loss`` scalar + ``losses``
+        (M*L,)); callers sync at most once per round (or every
+        ``log_every`` rounds, see ``train.trainer``).
+
+        Each distinct (M, L, K, B) signature compiles its own scan; with
+        ``fused_round_unroll=0`` the scan is fully unrolled because
+        XLA:CPU lowers conv gradients inside while-loop bodies to its
+        naive emitter (~40x slower, measured). On conv models prefer
+        ``unroll_clients=True`` — see ``_clients_unrolled``."""
+        M, L = idx.shape[:2]
+        assert L == self.ccfg.local_epochs, (L, self.ccfg.local_epochs)
+        if weights is None:
+            weights = jnp.ones((M, idx.shape[2]), jnp.float32)
+        state, losses = self._run_round_fused(
+            state, data, jnp.asarray(idx),
+            jnp.asarray(weights, jnp.float32))
+        return state, {"loss": jnp.mean(losses), "losses": losses}
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _run_round_fused(self, state, data, idx, weights):
+        M, L, K, B = idx.shape
+        step_impl = (self.fused_step_impl if self.ccfg.fused_step
+                     else self.protocol_step_impl)
+
+        # Scan over the cluster axis (the paper's sequential eq.-9
+        # dimension) with the L local epochs unrolled inside the body, so
+        # FedAvg runs unconditionally at the cluster boundary — a
+        # lax.cond would push the eq.-8 average into a sub-computation,
+        # where XLA:CPU emits the small dots with different fma
+        # contraction than the looped path's top-level _fedavg jit
+        # (observed as last-ULP drift in the conv biases).
+        def body(st, xs):
+            idx_m, w = xs                           # (L, K, B), (K,)
+            losses = []
+            for l in range(L):
+                # The looped path runs the batch transfer, each step, and
+                # each FedAvg as separate XLA programs;
+                # optimization_barrier pins those same fusion boundaries
+                # inside the scan, otherwise XLA may fuse the average
+                # into the step's update chain and reassociate
+                # reductions. Codegen inside the one fused program can
+                # still contract fma differently, so the equivalence
+                # contract is per-leaf ULP, not bitwise (see
+                # run_round_fused).
+                batch = jax.lax.optimization_barrier(
+                    jax.tree.map(lambda a: a[idx_m[l]], data))  # in-jit
+                st, mt = step_impl(st, batch)
+                st = jax.lax.optimization_barrier(st)
+                losses.append(mt["loss"])
+            if not self.ccfg.share_device_params:
+                st = jax.lax.optimization_barrier(self.fedavg_impl(st, w))
+            return st, jnp.stack(losses)
+
+        state, losses = jax.lax.scan(
+            body, state, (idx, weights),
+            unroll=self.ccfg.fused_round_unroll or M)
+        return state, losses.reshape(M * L)
 
     def export_params(self, state):
         dev0 = jax.tree.map(lambda t: t[0], state["dev"])

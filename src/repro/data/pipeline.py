@@ -4,12 +4,25 @@
 (K, B, ...) for the active cluster — the mini-batch draw of paper eq. (4).
 On a real multi-host pod each host would materialize only its mesh-row's
 clients; ``host_slice`` carries that logic (exercised logically here).
+
+``DeviceResidentDataset`` is the fused-round mirror of ``CPSLDataset``:
+the full dataset is uploaded to the accelerator once, and each round the
+host precomputes only a small (M, L, K, B) int32 index table — drawn from
+the SAME rng streams ``cluster_batch`` uses — that
+``CPSL.run_round_fused`` gathers inside the jit. No per-step host
+transfer, bit-identical batches.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+
+def shard_sizes(device_indices: List[np.ndarray],
+                devices: Sequence[int]) -> np.ndarray:
+    """Per-device local dataset sizes |D_{m,k}| — the eq. (8) weights."""
+    return np.array([len(device_indices[d]) for d in devices], np.float32)
 
 
 def batch_seed(seed: int, rnd: int, m: int, l: int) -> int:
@@ -30,8 +43,7 @@ class CPSLDataset:
         self.rng = np.random.default_rng(seed)
 
     def data_sizes(self, devices: Sequence[int]) -> np.ndarray:
-        return np.array([len(self.device_indices[d]) for d in devices],
-                        np.float32)
+        return shard_sizes(self.device_indices, devices)
 
     def cluster_batch(self, devices: Sequence[int],
                       seed: Optional[int] = None) -> Dict[str, np.ndarray]:
@@ -47,6 +59,78 @@ class CPSLDataset:
             xs.append(self.x[pick])
             ys.append(self.y[pick])
         return {self.fields[0]: np.stack(xs), self.fields[1]: np.stack(ys)}
+
+
+class DeviceResidentDataset:
+    """Device-resident dataset + per-round index tables for the fused
+    round (``CPSL.run_round_fused``).
+
+    ``data`` holds the full sample arrays as jax device arrays (leading
+    dim = sample count). ``round_index_table`` reproduces, entry for
+    entry, the draws ``CPSLDataset.cluster_batch(clusters[m],
+    seed=batch_seed(seed, rnd, m, l))`` would make — same
+    ``default_rng`` stream, same per-device call order — so the in-jit
+    gather ``data[field][idx[m, l]]`` is bit-identical to the host-side
+    numpy gather of the looped path."""
+
+    def __init__(self, images: np.ndarray, labels: np.ndarray,
+                 device_indices: List[np.ndarray], batch: int,
+                 field_names=("image", "label")):
+        # deferred so the host-side pipeline stays importable without jax
+        # (the engine's train=False control plane uses it numpy-only)
+        import jax.numpy as jnp
+        self.data = {field_names[0]: jnp.asarray(images),
+                     field_names[1]: jnp.asarray(labels)}
+        self.device_indices = [np.asarray(d) for d in device_indices]
+        self.B = batch
+        self.fields = field_names
+
+    @classmethod
+    def from_dataset(cls, ds: "CPSLDataset") -> "DeviceResidentDataset":
+        return cls(ds.x, ds.y, ds.device_indices, ds.B, ds.fields)
+
+    @classmethod
+    def coerce(cls, dataset) -> "DeviceResidentDataset":
+        """Accept a DeviceResidentDataset as-is, mirror any index-based
+        dataset (one exposing ``device_indices``) onto the device, and
+        reject generative datasets — shared by the trainer and the sim
+        engine so the fused-round eligibility rule lives in one place."""
+        if isinstance(dataset, cls):
+            return dataset
+        if hasattr(dataset, "device_indices"):
+            return cls.from_dataset(dataset)
+        raise ValueError(
+            "CPSLConfig.fused_round needs an index-based dataset "
+            "(CPSLDataset / DeviceResidentDataset); generative datasets "
+            "cannot be gathered on device")
+
+    def data_sizes(self, devices: Sequence[int]) -> np.ndarray:
+        return shard_sizes(self.device_indices, devices)
+
+    def cluster_weights(self, clusters: Sequence[Sequence[int]]
+                        ) -> np.ndarray:
+        """(M, K) eq.-8 weights: per-client local dataset sizes. Clusters
+        must be rectangular (engine-padded to the trainer's K slots)."""
+        return np.stack([self.data_sizes(c) for c in clusters])
+
+    def round_index_table(self, clusters: Sequence[Sequence[int]],
+                          seed: int, rnd: int, local_epochs: int
+                          ) -> np.ndarray:
+        """(M, L, K, B) int32 global sample indices for one round; row
+        (m, l, k) is exactly the pick ``cluster_batch`` would draw for
+        device ``clusters[m][k]`` at ``batch_seed(seed, rnd, m, l)``."""
+        M, K = len(clusters), len(clusters[0])
+        out = np.empty((M, local_epochs, K, self.B), np.int32)
+        for m, devices in enumerate(clusters):
+            assert len(devices) == K, \
+                "fused round needs rectangular (padded) clusters"
+            for l in range(local_epochs):
+                rng = np.random.default_rng(batch_seed(seed, rnd, m, l))
+                for k, d in enumerate(devices):
+                    idx = self.device_indices[d]
+                    out[m, l, k] = rng.choice(idx, self.B,
+                                              replace=len(idx) < self.B)
+        return out
 
 
 class LMClusterData:

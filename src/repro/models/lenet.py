@@ -90,8 +90,18 @@ def _apply_layer(params, x, name):
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
         return jax.nn.relu(y + p["b"].astype(x.dtype))
     if name.startswith("POOL"):
-        return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
-                                 (1, 2, 2, 1), "VALID")
+        # 2x2/stride-2 max-pool as reshape + reduce-max: forward is
+        # bit-identical to lax.reduce_window, but the gradient avoids
+        # XLA:CPU's SelectAndScatter (a scalar loop, ~15x slower than the
+        # reduce-max transpose — measured in benchmarks/bench_round.py).
+        # Tie-routing differs (reduce-max splits the cotangent among tied
+        # maxima, e.g. ReLU zeros; SelectAndScatter picks the first) —
+        # both are valid subgradients of max.
+        B, H, W, C = x.shape
+        if H % 2 or W % 2:   # odd maps (non-28 input_hw): VALID drops the rim
+            x = x[:, :H - H % 2, :W - W % 2]
+            B, H, W, C = x.shape
+        return jnp.max(x.reshape(B, H // 2, 2, W // 2, 2, C), axis=(2, 4))
     p = params[name]
     if x.ndim > 2:
         x = x.reshape(x.shape[0], -1)

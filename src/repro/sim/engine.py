@@ -15,7 +15,9 @@ Each round (== one small-timescale slot):
   2. plan the slot (Gibbs clustering + vectorized greedy spectrum);
   3. devices may vanish mid-round -> ``controller.repair`` (stale plan);
   4. score the executed plan with the latency model and advance sim time;
-  5. run the actual CPSL training round on the planned clusters;
+  5. run the actual CPSL training round on the planned clusters —
+     looped, or as one donated jit with device-resident data when
+     ``CPSLConfig.fused_round`` is set (``CPSL.run_round_fused``);
   6. drain device batteries (compute + transmit energy), possibly
      triggering depletion departures;
   7. evolve the fading/compute processes and sample arrivals;
@@ -37,7 +39,7 @@ from repro.core.channel import NetworkCfg
 from repro.core.cpsl import CPSL
 from repro.core.latency import CutProfile
 from repro.core.splitting import make_split_model
-from repro.data.pipeline import batch_seed
+from repro.data.pipeline import DeviceResidentDataset, batch_seed
 from repro.sim.controller import Plan, TwoTimescaleController
 from repro.sim.dynamics import DynamicsCfg, NetworkProcess
 
@@ -113,6 +115,13 @@ class SimEngine:
         self._n_shards = (n_data_shards
                           or len(getattr(dataset, "device_indices", []))
                           or None)
+        # fused-round path: dataset mirrored on device once; each round
+        # ships only the (M, L, K, B) index table into the jit. NOTE:
+        # every distinct cluster count M (churn) and cut layer compiles
+        # its own fused scan.
+        self._ds_dev: Optional[DeviceResidentDataset] = (
+            DeviceResidentDataset.coerce(dataset)
+            if train and ccfg.fused_round else None)
 
     # -- helpers --------------------------------------------------------------
 
@@ -124,16 +133,18 @@ class SimEngine:
         ccfg = dataclasses.replace(self.ccfg, cut_layer=v)
         return CPSL(make_split_model(self.model, v), ccfg)
 
-    def _batch_fn(self, plan: Plan, rnd: int):
+    def _padded_clusters(self, plan: Plan) -> List[List[int]]:
+        """Per-cluster data-shard ids, padded (by wrapping) to the
+        trainer's fixed K slots — shared by the looped batch draw, the
+        fused index table, and the eq.-8 weights so all three agree."""
         K = self.ccfg.cluster_size
-        gclusters = plan.global_clusters()
+        return [[self._data_shard(ids[i % len(ids)]) for i in range(K)]
+                for ids in plan.global_clusters()]
 
+    def _batch_fn(self, padded: List[List[int]], rnd: int):
         def batch_fn(m, l):
-            ids = gclusters[m]
-            # pad short (churned) clusters to the trainer's fixed K slots
-            padded = [self._data_shard(ids[i % len(ids)]) for i in range(K)]
             b = self.ds.cluster_batch(
-                padded, seed=batch_seed(self.scfg.seed, rnd, m, l))
+                padded[m], seed=batch_seed(self.scfg.seed, rnd, m, l))
             return jax.tree.map(jnp.asarray, b)
 
         return batch_fn
@@ -214,10 +225,25 @@ class SimEngine:
             if cut_means is not None:
                 rec["cut_means"] = cut_means
             if self.train:
-                state, metrics = cpsl.run_round(
-                    state, self._batch_fn(plan, rnd),
-                    n_clusters=len(plan.clusters))
-                rec["loss"] = metrics["loss"]
+                padded = self._padded_clusters(plan)
+                if self._ds_dev is not None:
+                    idx = self._ds_dev.round_index_table(
+                        padded, self.scfg.seed, rnd,
+                        self.ccfg.local_epochs)
+                    state, metrics = cpsl.run_round_fused(
+                        state, self._ds_dev.data, idx,
+                        self._ds_dev.cluster_weights(padded))
+                    # the trace record is JSONL-serialized per round, so
+                    # the engine syncs once here regardless
+                    rec["loss"] = float(metrics["loss"])
+                else:
+                    sizes = (np.stack([self.ds.data_sizes(p)
+                                       for p in padded])
+                             if hasattr(self.ds, "data_sizes") else None)
+                    state, metrics = cpsl.run_round(
+                        state, self._batch_fn(padded, rnd),
+                        n_clusters=len(plan.clusters), data_sizes=sizes)
+                    rec["loss"] = metrics["loss"]
                 if self.eval_fn is not None:
                     rec["eval"] = self.eval_fn(cpsl, state)
 

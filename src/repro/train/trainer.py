@@ -6,7 +6,12 @@ Each round (paper Alg. 1):
      spectrum (Alg. 3/4), multi-chain best-of-R Gibbs ("gibbs-mc", via
      the replicated planner in ``repro.sim.batched``) — or fixed/random
      clustering,
-  3. run intra-cluster epochs + FedAvg per cluster, sequentially,
+  3. run intra-cluster epochs + FedAvg per cluster, sequentially —
+     either the looped reference path (one jitted step per epoch, host
+     batch gather, eq.-8 weights from the dataset's shard sizes) or,
+     with ``CPSLConfig.fused_round``, the whole round as ONE donated jit
+     over a device-resident dataset (``CPSL.run_round_fused``; metrics
+     sync every ``log_every`` rounds),
   4. accumulate the *simulated wireless latency* of the round (eqs. 15-25)
      next to the measured wall-clock,
   5. checkpoint every ``ckpt_every`` rounds (async, atomic, keep-k);
@@ -38,7 +43,8 @@ from repro.core.compression import compression_ratio
 from repro.core.cpsl import CPSL
 from repro.core.latency import CutProfile
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.data.pipeline import batch_seed
+from repro.data.pipeline import DeviceResidentDataset, batch_seed
+from repro.sim.batched import gibbs_clustering_multichain
 
 
 class SimulatedFailure(RuntimeError):
@@ -58,6 +64,9 @@ class TrainerCfg:
                                       # (best-of-R; chain 0 == "gibbs")
     fail_at_round: Optional[int] = None
     log_path: Optional[str] = None
+    log_every: int = 1                # fused rounds keep metrics on device;
+                                      # host-sync + JSONL flush every this
+                                      # many rounds (1 == every round)
     seed: int = 0
 
 
@@ -81,7 +90,13 @@ class CPSLTrainer:
             self._prof_compressed: Optional[CutProfile] = prof2
         else:
             self._prof_compressed = None
+        # fused-round path: mirror the dataset onto the device once; each
+        # round then ships only an (M, L, K, B) index table into the jit
+        self._ds_dev: Optional[DeviceResidentDataset] = (
+            DeviceResidentDataset.coerce(dataset)
+            if cpsl.ccfg.fused_round else None)
         self.history: List[dict] = []
+        self._pending: List[dict] = []
         self._stop = False
         try:
             signal.signal(signal.SIGTERM, self._sigterm)
@@ -106,7 +121,6 @@ class CPSLTrainer:
         elif kind == "gibbs-mc":
             # best-of-R lockstep chains (chain 0 == the "gibbs" stream, so
             # this never plans worse than "gibbs" at the same seed)
-            from repro.sim.batched import gibbs_clustering_multichain
             clusters, xs, lat = gibbs_clustering_multichain(
                 v, net, self.ncfg, self.prof, self.cpsl.ccfg.batch_per_device,
                 self.cpsl.ccfg.local_epochs, M, K,
@@ -146,39 +160,75 @@ class CPSLTrainer:
         else:
             sim_time = 0.0
 
-        for rnd in range(start_round, self.tcfg.rounds):
-            if self.tcfg.fail_at_round is not None \
-                    and rnd == self.tcfg.fail_at_round:
-                raise SimulatedFailure(f"injected failure at round {rnd}")
-            t0 = time.monotonic()
-            clusters, xs, lat = self._plan_round(v, rnd)
+        try:
+            for rnd in range(start_round, self.tcfg.rounds):
+                if self.tcfg.fail_at_round is not None \
+                        and rnd == self.tcfg.fail_at_round:
+                    raise SimulatedFailure(f"injected failure at round {rnd}")
+                t0 = time.monotonic()
+                clusters, xs, lat = self._plan_round(v, rnd)
 
-            def batch_fn(m, l, _clusters=clusters, _rnd=rnd):
-                b = self.ds.cluster_batch(
-                    _clusters[m], seed=batch_seed(self.tcfg.seed, _rnd, m, l))
-                return jax.tree.map(jnp.asarray, b)
+                if self._ds_dev is not None:
+                    # fused round: one donated jit, batches gathered on
+                    # device from the precomputed index table; the loss
+                    # stays a device scalar until the next log flush
+                    idx = self._ds_dev.round_index_table(
+                        clusters, self.tcfg.seed, rnd,
+                        self.cpsl.ccfg.local_epochs)
+                    state, metrics = self.cpsl.run_round_fused(
+                        state, self._ds_dev.data, idx,
+                        self._ds_dev.cluster_weights(clusters))
+                    # dispatch is async — wait for the device compute so
+                    # wall_s stays a real measurement (no host transfer;
+                    # the metric sync still batches per log_every)
+                    jax.block_until_ready(state)
+                else:
+                    def batch_fn(m, l, _clusters=clusters, _rnd=rnd):
+                        b = self.ds.cluster_batch(
+                            _clusters[m],
+                            seed=batch_seed(self.tcfg.seed, _rnd, m, l))
+                        return jax.tree.map(jnp.asarray, b)
 
-            state, metrics = self.cpsl.run_round(state, batch_fn,
-                                                 n_clusters=len(clusters))
-            sim_time += lat
-            wall = time.monotonic() - t0
-            rec = {"round": rnd, "loss": metrics["loss"],
-                   "sim_latency_s": lat, "sim_time_s": sim_time,
-                   "wall_s": wall}
-            if self.eval_fn is not None:
-                rec["eval"] = self.eval_fn(self.cpsl, state)
-            self.history.append(rec)
+                    sizes = (np.stack([self.ds.data_sizes(c)
+                                       for c in clusters])
+                             if hasattr(self.ds, "data_sizes") else None)
+                    state, metrics = self.cpsl.run_round(
+                        state, batch_fn, n_clusters=len(clusters),
+                        data_sizes=sizes)
+                sim_time += lat
+                wall = time.monotonic() - t0
+                rec = {"round": rnd, "loss": metrics["loss"],
+                       "sim_latency_s": lat, "sim_time_s": sim_time,
+                       "wall_s": wall}
+                if self.eval_fn is not None:
+                    rec["eval"] = self.eval_fn(self.cpsl, state)
+                self.history.append(rec)
+                self._pending.append(rec)
+
+                last = rnd == self.tcfg.rounds - 1
+                if (rnd + 1) % self.tcfg.log_every == 0 or last \
+                        or self._stop:
+                    self._flush_logs()
+                if (rnd + 1) % self.tcfg.ckpt_every == 0 or last \
+                        or self._stop:
+                    self.ckpt.save({"round": jnp.asarray(rnd + 1, jnp.int32),
+                                    "sim_time": jnp.asarray(sim_time),
+                                    "state": state},
+                                   step=rnd + 1, block=last or self._stop)
+                if self._stop:
+                    break
+        finally:
+            self._flush_logs()
+        self.ckpt.wait()
+        return state
+
+    def _flush_logs(self):
+        """Host-sync pending round metrics and append them to the JSONL
+        log — the fused path's single sync point (every ``log_every``
+        rounds)."""
+        pending, self._pending = self._pending, []
+        for rec in pending:
+            rec["loss"] = float(rec["loss"])
             if self.tcfg.log_path:
                 with open(self.tcfg.log_path, "a") as f:
                     f.write(json.dumps(rec) + "\n")
-
-            last = rnd == self.tcfg.rounds - 1
-            if (rnd + 1) % self.tcfg.ckpt_every == 0 or last or self._stop:
-                self.ckpt.save({"round": jnp.asarray(rnd + 1, jnp.int32),
-                                "sim_time": jnp.asarray(sim_time),
-                                "state": state},
-                               step=rnd + 1, block=last or self._stop)
-            if self._stop:
-                break
-        self.ckpt.wait()
-        return state

@@ -182,6 +182,53 @@ def test_topk_keeps_largest():
     assert float(jnp.count_nonzero(out)) == 2
 
 
+def test_topk_exact_k_on_ties():
+    """Tied magnitudes (quantized or zero-heavy deltas) must not inflate
+    the kept count past k — the latency model prices the uplink with
+    compression_ratio, which assumes exactly k entries survive."""
+    x = jnp.array([1.0, -1.0, 1.0, 1.0, 0.5, -1.0, 1.0, 0.25])
+    out = cmp.topk_mask(x, 0.5)                    # k = 4, six entries tie
+    assert int(jnp.count_nonzero(out)) == 4
+    assert bool(jnp.all(jnp.abs(out[out != 0]) == 1.0))
+    # zero-heavy delta: the old >=-threshold rule kept ALL 16 entries
+    z = jnp.zeros((16,)).at[3].set(2.0)
+    out = cmp.topk_mask(z, 0.25)                   # k = 4, zeros tie
+    assert int(jnp.count_nonzero(out)) == 1 and float(out[3]) == 2.0
+    # multi-dim leaves keep their shape
+    w = jnp.ones((4, 4))
+    assert int(jnp.count_nonzero(cmp.topk_mask(w, 0.25))) == 4
+    assert cmp.topk_mask(w, 0.25).shape == (4, 4)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """microbatches=m splits B into m rematted grad-accumulation slices:
+    same update as the full-batch step (within float tolerance) and the
+    reported loss is exactly the average of the per-slice losses."""
+    import dataclasses
+    split = make_split_model("lenet", 3)
+    ccfg = CPSLConfig(cut_layer=3, cluster_size=2, local_epochs=1,
+                      lr_device=0.05, lr_server=0.05)
+    cp1 = CPSL(split, ccfg)
+    cp4 = CPSL(split, dataclasses.replace(ccfg, microbatches=4))
+    batch = _lenet_batch(2, 16, seed=3)
+    s0 = cp1.init_state(KEY)
+    s1, m1 = cp1.cluster_step(cp1.init_state(KEY), batch)
+    s4, m4 = cp4.cluster_step(cp4.init_state(KEY), batch)
+    # grad of the mean == mean of slice grads -> near-identical updates
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-5
+    for grp in ("dev", "srv"):
+        for a, b in zip(jax.tree.leaves(s1[grp]), jax.tree.leaves(s4[grp])):
+            assert jnp.abs(a - b).max() < 1e-5
+    # exact loss averaging: m4's loss accumulates sum_i loss_i / m in
+    # slice order over contiguous B/m slices of each client's batch
+    acc = jnp.zeros(())
+    for i in range(4):
+        mb = jax.tree.map(lambda t: t[:, i * 4:(i + 1) * 4], batch)
+        _, mt = cp1._total_loss(s0["dev"], s0["srv"], mb)
+        acc = acc + mt["loss"] / 4
+    assert abs(float(acc) - float(m4["loss"])) < 1e-7
+
+
 def test_int8_quantization_bounded_error():
     x = jax.random.normal(KEY, (128,)) * 3
     q = cmp.compress_int8(x)

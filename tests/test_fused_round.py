@@ -1,0 +1,276 @@
+"""Fused-round equivalence: ``CPSL.run_round_fused`` (one donated jit of a
+scan over the cluster axis, device-resident data, in-jit batch gather,
+FedAvg folded in at cluster boundaries) vs the looped ``run_round``.
+
+The contract decomposes into three layers, each pinned here:
+  1. orchestration — at identical seeds and the SAME client lowering, the
+     fused round reproduces the looped round: integer leaves (step
+     counter) and the rng stream bit-for-bit, float leaves (params,
+     optimizer state, error feedback, loss) to a few ULPs per leaf
+     (XLA:CPU emits conv/dot gradients with context-dependent fma
+     contraction inside the single fused program — measured drift
+     <= 0.3 ULP after 3 rounds) — for both the ``fused`` and
+     ``protocol`` step modes, including straggler dropout, upload
+     compression, and eq.-8 data-size weighting;
+  2. step lowering — ``unroll_clients=True`` (K plain convolutions)
+     matches the vmapped step (one grouped convolution) to ULP;
+  3. pipeline — ``DeviceResidentDataset`` index tables gather batches
+     bit-identical to ``CPSLDataset.cluster_batch``, and the trainer /
+     sim engine reproduce their looped runs with ``fused_round`` on.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CPSLConfig, SimCfg
+from repro.core.cpsl import CPSL
+from repro.core.splitting import make_split_model
+from repro.data.pipeline import (CPSLDataset, DeviceResidentDataset,
+                                 batch_seed)
+from repro.data.synthetic import non_iid_split, synthetic_mnist
+
+KEY = jax.random.PRNGKey(0)
+CLUSTERS = [[0, 1, 2], [3, 4, 5]]
+M, K, B = 2, 3, 4
+ULP = float(np.finfo(np.float32).eps)          # 2^-23 at scale 1
+
+
+def _data():
+    xtr, ytr, _, _ = synthetic_mnist(400, 50, seed=0)
+    idx = non_iid_split(ytr, n_devices=6, samples_per_device=60, seed=0)
+    ds = CPSLDataset(xtr, ytr, idx, batch=B)
+    return ds, DeviceResidentDataset.from_dataset(ds)
+
+
+def _ccfg(**kw):
+    base = dict(cut_layer=2, n_clusters=M, cluster_size=K, local_epochs=2,
+                batch_per_device=B, unroll_clients=True)
+    base.update(kw)
+    return CPSLConfig(**base)
+
+
+def _run_both(ccfg, rounds=2):
+    """Same seeds through the looped and the fused round; returns both
+    final states and the last round's metrics."""
+    ds, dsd = _data()
+    cp = CPSL(make_split_model("lenet", ccfg.cut_layer), ccfg)
+    s_loop, s_fused = cp.init_state(KEY), cp.init_state(KEY)
+    sizes = np.stack([ds.data_sizes(c) for c in CLUSTERS])
+    for rnd in range(rounds):
+        def batch_fn(m, l, _r=rnd):
+            return jax.tree.map(jnp.asarray, ds.cluster_batch(
+                CLUSTERS[m], seed=batch_seed(0, _r, m, l)))
+
+        s_loop, m_loop = cp.run_round(s_loop, batch_fn, n_clusters=M,
+                                      data_sizes=sizes)
+        idx = dsd.round_index_table(CLUSTERS, 0, rnd, ccfg.local_epochs)
+        s_fused, m_fused = cp.run_round_fused(
+            s_fused, dsd.data, idx, dsd.cluster_weights(CLUSTERS))
+    return s_loop, s_fused, m_loop, m_fused
+
+
+def _assert_states_match(s_loop, s_fused, ulps=32):
+    """The equivalence contract: non-float leaves (step counter, rng
+    stream) bit-exact; float leaves within ``ulps`` ULPs at each leaf's
+    scale (measured <= 0.3 after 3 rounds — the slack is headroom for
+    other BLAS/XLA builds, still far below any real divergence)."""
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(s_loop)[0],
+            jax.tree_util.tree_flatten_with_path(s_fused)[0],
+            strict=True):
+        name = jax.tree_util.keystr(pa)
+        if jnp.issubdtype(a.dtype, jnp.floating):
+            tol = ulps * ULP * max(1.0, float(jnp.abs(a).max()))
+            diff = float(jnp.abs(a.astype(jnp.float32)
+                                 - b.astype(jnp.float32)).max())
+            assert diff <= tol, f"fused diverged at {name}: {diff} > {tol}"
+        else:
+            assert jnp.array_equal(a, b), f"fused diverged at {name}"
+
+
+def _assert_states_equal(s_a, s_b):
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(s_a)[0],
+            jax.tree_util.tree_flatten_with_path(s_b)[0],
+            strict=True):
+        assert jnp.array_equal(a, b), \
+            f"diverged at {jax.tree_util.keystr(pa)}"
+
+
+# --------------------------------------------------------------------------
+# 1. orchestration equivalence
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused_step", [True, False],
+                         ids=["fused-step", "protocol-step"])
+def test_fused_round_matches_looped(fused_step):
+    s_loop, s_fused, m_loop, m_fused = _run_both(
+        _ccfg(fused_step=fused_step))
+    _assert_states_match(s_loop, s_fused)
+    assert m_loop["loss"] == pytest.approx(float(m_fused["loss"]),
+                                           rel=1e-6)
+    assert m_fused["losses"].shape == (M * 2,)
+
+
+def test_fused_round_matches_looped_vmapped_lowering():
+    """The orchestration contract holds for the default (vmapped) client
+    lowering too."""
+    s_loop, s_fused, m_loop, m_fused = _run_both(
+        _ccfg(unroll_clients=False, local_epochs=1), rounds=1)
+    _assert_states_match(s_loop, s_fused)
+    assert m_loop["loss"] == pytest.approx(float(m_fused["loss"]),
+                                           rel=1e-6)
+
+
+def test_fused_round_straggler_and_compression():
+    """Straggler dropout consumes the carried rng (bit-exact stream —
+    same splits at the same cluster boundaries) and compression carries
+    error feedback through the scan exactly as the looped path does."""
+    s_loop, s_fused, _, _ = _run_both(
+        _ccfg(straggler_dropout=0.4, compress_uploads="topk",
+              compress_topk=0.25))
+    assert "ef" in s_loop
+    _assert_states_match(s_loop, s_fused)
+    assert jnp.array_equal(s_loop["rng"], s_fused["rng"])
+    # the rng must actually have advanced (one split per boundary)
+    fresh = CPSL(make_split_model("lenet", 2), _ccfg()).init_state(KEY)
+    assert not jnp.array_equal(s_loop["rng"], fresh["rng"])
+
+
+def test_run_round_threads_data_sizes():
+    """Satellite: eq. 8 weighting. run_round(data_sizes=...) must apply
+    the per-cluster weights — M=1 reduces it to step + weighted fedavg
+    (same jits, so bit-exact here)."""
+    ds, _ = _data()
+    ccfg = _ccfg(n_clusters=1, local_epochs=1)
+    cp = CPSL(make_split_model("lenet", 2), ccfg)
+    sizes = np.array([[1.0, 2.0, 5.0]], np.float32)
+
+    def batch_fn(m, l):
+        return jax.tree.map(jnp.asarray, ds.cluster_batch(
+            CLUSTERS[0], seed=batch_seed(0, 0, 0, 0)))
+
+    got, _ = cp.run_round(cp.init_state(KEY), batch_fn, n_clusters=1,
+                          data_sizes=sizes)
+    want, _ = cp.cluster_step(cp.init_state(KEY), batch_fn(0, 0))
+    want = cp.fedavg(want, data_sizes=sizes[0])
+    _assert_states_equal(want, got)
+    # and uniform weights give a different aggregate (weights matter)
+    unif, _ = cp.run_round(cp.init_state(KEY), batch_fn, n_clusters=1)
+    assert any(not jnp.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(got["dev"]), jax.tree.leaves(unif["dev"])))
+
+
+# --------------------------------------------------------------------------
+# 2. step-lowering equivalence (ULP)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused_step", [True, False],
+                         ids=["fused-step", "protocol-step"])
+def test_unrolled_clients_match_vmapped_step(fused_step):
+    """unroll_clients swaps one grouped conv for K plain convs — same
+    math, different XLA lowering; updates agree to ~1e-7 (measured
+    ~7e-9) after a step."""
+    ds, _ = _data()
+    cp_v = CPSL(make_split_model("lenet", 2),
+                _ccfg(fused_step=fused_step, unroll_clients=False))
+    cp_u = CPSL(make_split_model("lenet", 2),
+                _ccfg(fused_step=fused_step, unroll_clients=True))
+    batch = jax.tree.map(jnp.asarray, ds.cluster_batch(
+        CLUSTERS[0], seed=batch_seed(0, 0, 0, 0)))
+    s_v, m_v = cp_v.cluster_step(cp_v.init_state(KEY), batch)
+    s_u, m_u = cp_u.cluster_step(cp_u.init_state(KEY), batch)
+    assert abs(float(m_v["loss"]) - float(m_u["loss"])) < 1e-6
+    for grp in ("dev", "srv"):
+        for a, b in zip(jax.tree.leaves(s_v[grp]), jax.tree.leaves(s_u[grp])):
+            assert float(jnp.abs(a - b).max()) < 1e-5
+
+
+# --------------------------------------------------------------------------
+# 3. pipeline: index tables, trainer, engine
+# --------------------------------------------------------------------------
+
+def test_index_table_gathers_cluster_batch_exactly():
+    ds, dsd = _data()
+    idx = dsd.round_index_table(CLUSTERS, seed=7, rnd=3, local_epochs=2)
+    assert idx.shape == (M, 2, K, B) and idx.dtype == np.int32
+    for m in range(M):
+        for l in range(2):
+            want = ds.cluster_batch(CLUSTERS[m],
+                                    seed=batch_seed(7, 3, m, l))
+            got = {f: np.asarray(dsd.data[f][idx[m, l]]) for f in ds.fields}
+            for f in ds.fields:
+                np.testing.assert_array_equal(got[f],
+                                              want[f].astype(got[f].dtype))
+    np.testing.assert_array_equal(
+        dsd.cluster_weights(CLUSTERS),
+        np.stack([ds.data_sizes(c) for c in CLUSTERS]))
+
+
+def test_trainer_fused_round_matches_looped(tmp_path):
+    """CPSLTrainer with fused_round on == off (same planner stream, same
+    batch seeds, same eq.-8 weights); also exercises log_every > 1
+    (deferred host sync + JSONL flush)."""
+    from repro.core.channel import NetworkCfg
+    from repro.core.profile import lenet_profile
+    from repro.train.trainer import CPSLTrainer, TrainerCfg
+
+    ds, _ = _data()
+
+    def mk(fused, d):
+        ccfg = _ccfg(cut_layer=3, fused_round=fused, local_epochs=2)
+        tcfg = TrainerCfg(rounds=3, ckpt_every=10, ckpt_dir=str(d),
+                          resource_mgmt="random", gibbs_iters=5,
+                          async_ckpt=False, seed=0,
+                          log_every=2 if fused else 1,
+                          log_path=str(d / "log.jsonl"))
+        return CPSLTrainer(CPSL(make_split_model("lenet", 3), ccfg), ds,
+                           lenet_profile(), NetworkCfg(n_devices=6), tcfg)
+
+    tr_l, tr_f = mk(False, tmp_path / "a"), mk(True, tmp_path / "b")
+    s_l = tr_l.run(KEY)
+    s_f = tr_f.run(KEY)
+    _assert_states_match(s_l, s_f)
+    assert len(tr_f.history) == 3 and not tr_f._pending
+    for h_l, h_f in zip(tr_l.history, tr_f.history):
+        assert isinstance(h_f["loss"], float)      # synced at the flush
+        assert h_l["loss"] == pytest.approx(h_f["loss"], rel=1e-6)
+        assert h_l["sim_latency_s"] == h_f["sim_latency_s"]
+    assert sum(1 for _ in open(tmp_path / "b" / "log.jsonl")) == 3
+
+
+def test_engine_fused_round_matches_looped(tmp_path):
+    """SimEngine under churn: the padded-cluster index tables and eq.-8
+    weights reproduce the looped engine path."""
+    from repro.core import profile as pf
+    from repro.core.channel import NetworkCfg
+    from repro.sim.dynamics import DynamicsCfg
+    from repro.sim.engine import SimEngine
+
+    ds, _ = _data()
+    ncfg = NetworkCfg(n_devices=6, n_subcarriers=12)
+    scfg = SimCfg(rounds=3, epoch_len=2, cluster_size=3, saa_samples=1,
+                  saa_gibbs_iters=6, gibbs_iters=12, cuts=(2,), seed=0)
+
+    def run(fused):
+        dcfg = DynamicsCfg(rho_snr=0.9, forced_departures={1: (4,)},
+                           seed=0)
+        ccfg = _ccfg(fused_round=fused, local_epochs=1)
+        eng = SimEngine("lenet", ds, pf.lenet_profile(), ncfg, dcfg, scfg,
+                        ccfg)
+        return eng.run(jax.random.PRNGKey(0))
+
+    s_l, tr_l = run(False)
+    s_f, tr_f = run(True)
+    _assert_states_match(s_l, s_f)
+    # round 1 loses a device -> a short cluster that both paths pad (by
+    # wrapping) to the trainer's K slots
+    assert any(len(c) < K
+               for r in tr_f for c in r.get("clusters_global", []))
+    for r_l, r_f in zip(tr_l, tr_f):
+        assert r_l["loss"] == pytest.approx(r_f["loss"], rel=1e-6)
+        assert r_l["clusters_global"] == r_f["clusters_global"]
+        assert r_l["latency_s"] == r_f["latency_s"]
