@@ -1,0 +1,294 @@
+"""Experiment-fleet benchmark: ``CPSL.run_fleet`` (E whole training
+curves as ONE batched program) vs running the same experiment grid
+sequentially.
+
+The grid is a multi-config x multi-seed LeNet sweep: ``--replicas`` E
+replicas = (E/2 learning rates) x (2 seeds). The two arms produce the
+same deliverable — E loss curves + eval accuracy at the same cadence:
+
+  sequential   the status-quo experiment loop: one trainer per
+               lr-config (each bakes its lr into the trace, so each
+               config pays its own whole-curve jit compile — exactly the
+               "recompiling per sweep variant" cost the fig benchmarks
+               used to pay), solo ``run_training_fused`` runs at the
+               repo's default solo lowering (direct convs +
+               unroll_clients, rounds unrolled), seeds sharing their
+               config's executable.
+  fleet        ``run_fleet``: per-replica lrs/seeds/shards enter as
+               *data* (lr_scale array, index tables, stacked states), so
+               the whole grid is one compile + one batched dispatch on
+               the fleet lowering (im2col convs + scanned round axis).
+
+On a saturated 2-core CPU the batched execution itself is roughly at
+parity with sequential execution (the machine is compute-bound — the
+report separates ``exec`` from ``compile`` so this stays visible); the
+end-to-end win is structural: one compile instead of one per config, and
+one dispatch instead of E x R. On accelerators the replica axis is the
+one you shard. Asserts:
+
+  * end-to-end wall-clock speedup >= ``FLEET_MIN_SPEEDUP`` (default 3)
+    at the 8-replica grid;
+  * fleet replica r is bit-exact (int/rng leaves) and ULP-equal per
+    float leaf to the solo ``run_training_fused`` run with replica r's
+    (seed, lr) at the fleet's own lowering — strict regardless of
+    runner noise.
+
+Also reports the ``seq+scan`` ablation (sequential runs upgraded to the
+fleet's constant-compile lowering — the best sequential this PR makes
+possible) and a padded ``run_cpsl`` N_m sweep showing per-variant
+compile vanishing once variants share one padded executable.
+
+Writes JSON to ``--out`` / ``$FLEET_BENCH_JSON`` (default
+/tmp/bench_fleet.json) — CI uploads it as an artifact:
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet --quick
+    PYTHONPATH=src FLEET_MIN_SPEEDUP=1 python -m benchmarks.bench_fleet \
+        --replicas 2 --rounds 3          # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import bench_common as bc
+from repro.configs.base import CPSLConfig
+from repro.core.cpsl import CPSL
+from repro.core.splitting import make_split_model
+from repro.data.pipeline import DeviceResidentDataset, fleet_plan
+from repro.data.synthetic import non_iid_split, synthetic_mnist
+
+M, K, B, L, CUT = 2, 3, 16, 1, 3
+N_DEV = M * K
+BASE_LR = 0.05
+ULP = float(np.finfo(np.float32).eps)
+
+
+def grid(replicas):
+    """(seed, lr_scale) grid: replicas/2 lr configs x 2 seeds (or 1 seed
+    per lr when replicas < 4)."""
+    n_seeds = 2 if replicas >= 4 else 1
+    n_lrs = replicas // n_seeds
+    assert n_lrs * n_seeds == replicas, replicas
+    scales = [2.0 ** -i for i in range(n_lrs)]
+    return [(seed, ls) for ls in scales for seed in range(n_seeds)]
+
+
+def setup(rounds, replicas):
+    xtr, ytr, xte, yte = synthetic_mnist(2000, 400, seed=0)
+    specs = grid(replicas)
+    shards = {s: non_iid_split(ytr, n_devices=N_DEV,
+                               samples_per_device=120, seed=s)
+              for s in {s for s, _ in specs}}
+    layout = [list(range(m * K, (m + 1) * K)) for m in range(M)]
+    plan = fleet_plan([shards[s] for s, _ in specs], B,
+                      [layout] * replicas, [s for s, _ in specs],
+                      rounds, L)
+    dsd = DeviceResidentDataset(xtr, ytr, shards[specs[0][0]], B,
+                                eval_images=xte, eval_labels=yte)
+    return specs, plan, dsd
+
+
+def _ccfg(**kw):
+    base = dict(cut_layer=CUT, n_clusters=M, cluster_size=K,
+                local_epochs=L, batch_per_device=B,
+                lr_device=BASE_LR, lr_server=BASE_LR)
+    base.update(kw)
+    return CPSLConfig(**base)
+
+
+def _cpsl(ccfg):
+    return CPSL(make_split_model("lenet", CUT,
+                                 conv_impl=ccfg.conv_impl), ccfg)
+
+
+def _solo_curves(specs, plan, dsd, eval_every, ccfg_fn, share_per_lr=True):
+    """The sequential arm: one CPSL per lr config (lr baked into the
+    trace; seeds reuse their config's instance/executable), solo fused
+    curves run one after another. Returns (wall_s, first_call_s of the
+    first run per config, curves)."""
+    by_lr = {}
+    curves = []
+    t0 = time.perf_counter()
+    compiles = []
+    for e, (seed, ls) in enumerate(specs):
+        key = ls if share_per_lr else e
+        if key not in by_lr:
+            by_lr[key] = _cpsl(ccfg_fn(ls))
+        cp = by_lr[key]
+        t1 = time.perf_counter()
+        state = cp.init_state(jax.random.PRNGKey(seed))
+        state, metrics = cp.run_training_fused(
+            state, dsd.data, plan.idx[e], plan.weights[e],
+            eval_data=dsd.eval_data, eval_every=eval_every)
+        jax.block_until_ready(metrics["loss"])
+        compiles.append(time.perf_counter() - t1)
+        curves.append({"loss": np.asarray(metrics["loss"]),
+                       "acc": np.asarray(metrics["eval"]["acc"])})
+    return time.perf_counter() - t0, compiles, curves
+
+
+def bench_speedup(rounds, replicas, eval_every, result):
+    specs, plan, dsd = setup(rounds, replicas)
+
+    # -- sequential, repo-default solo lowering (direct convs, unrolled
+    # rounds): each lr config bakes its lr -> compiles its own curve
+    def default_ccfg(ls):
+        return _ccfg(lr_device=BASE_LR * ls, lr_server=BASE_LR * ls,
+                     unroll_clients=True)
+
+    seq_wall, seq_calls, seq_curves = _solo_curves(
+        specs, plan, dsd, eval_every, default_ccfg)
+
+    # -- fleet: one batched program, lrs as data
+    fleet_ccfg = _ccfg(conv_impl="im2col", scan_rounds=True,
+                       fused_round_unroll=1)
+    cpf = _cpsl(fleet_ccfg)
+    lr_scale = np.array([ls for _, ls in specs], np.float32)
+    t0 = time.perf_counter()
+    states = cpf.init_fleet_state([s for s, _ in specs])
+    states, mf = cpf.run_fleet(states, dsd.data, plan.idx, plan.weights,
+                               lr_scale=lr_scale, eval_data=dsd.eval_data,
+                               eval_every=eval_every)
+    jax.block_until_ready(mf["loss"])
+    fleet_first = time.perf_counter() - t0
+    # second dispatch separates compile from steady-state execution
+    t0 = time.perf_counter()
+    states2 = cpf.init_fleet_state([s for s, _ in specs])
+    states2, _ = cpf.run_fleet(states2, dsd.data, plan.idx, plan.weights,
+                               lr_scale=lr_scale, eval_data=dsd.eval_data,
+                               eval_every=eval_every)
+    jax.block_until_ready(states2)
+    fleet_steady = time.perf_counter() - t0
+
+    # -- ablation: sequential upgraded to the fleet's constant-compile
+    # lowering (one compile for the first lr, cache reuse per config)
+    def scan_ccfg(ls):
+        return _ccfg(lr_device=BASE_LR * ls, lr_server=BASE_LR * ls,
+                     conv_impl="im2col", scan_rounds=True,
+                     fused_round_unroll=1)
+
+    scan_wall, scan_calls, _ = _solo_curves(specs, plan, dsd, eval_every,
+                                            scan_ccfg)
+
+    speedup = seq_wall / fleet_first
+    speedup_scan = scan_wall / fleet_first
+    n_cfg = len({ls for _, ls in specs})
+    print(f"  sequential (default solo):  {seq_wall:7.1f}s "
+          f"({n_cfg} compiles; per-run {np.round(seq_calls, 1)})")
+    print(f"  sequential (scan lowering): {scan_wall:7.1f}s")
+    print(f"  fleet (one program):        {fleet_first:7.1f}s "
+          f"(steady re-dispatch {fleet_steady:.1f}s)")
+    print(f"  end-to-end speedup:   {speedup:5.2f}x  "
+          f"(vs scan-seq ablation {speedup_scan:.2f}x)")
+    floor = float(os.environ.get("FLEET_MIN_SPEEDUP", "3"))
+    assert speedup >= floor, \
+        f"fleet speedup {speedup:.2f}x < {floor:g}x"
+    result["speedup"] = {
+        "replicas": replicas, "rounds": rounds, "grid": specs,
+        "config": {"n_clusters": M, "cluster_size": K, "batch": B,
+                   "local_epochs": L, "cut": CUT},
+        "sequential_s": seq_wall, "sequential_first_calls_s": seq_calls,
+        "sequential_scan_s": scan_wall,
+        "fleet_first_call_s": fleet_first, "fleet_steady_s": fleet_steady,
+        "fleet_compile_s": max(fleet_first - fleet_steady, 0.0),
+        "speedup": speedup, "speedup_vs_scan_seq": speedup_scan}
+    return specs, plan, dsd, cpf, states, mf, lr_scale, seq_curves
+
+
+def bench_equivalence(specs, plan, dsd, cpf, states, mf, lr_scale,
+                      eval_every, result):
+    """Replica r == solo run_training_fused(seed r, lr_scale r) at the
+    fleet's own lowering: ints/rng bit-exact, floats ULP-equal per
+    leaf."""
+    worst = 0.0
+    # one solo CPSL reused across replicas: lr_scale enters as a traced
+    # arg, so all E solo dispatches share a single compile
+    solo = _cpsl(cpf.ccfg)
+    for e, (seed, _) in enumerate(specs):
+        s, ms = solo.run_training_fused(
+            solo.init_state(jax.random.PRNGKey(seed)), dsd.data,
+            plan.idx[e], plan.weights[e], lr_scale=jnp.float32(lr_scale[e]),
+            eval_data=dsd.eval_data, eval_every=eval_every)
+        for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(states),
+                        strict=True):
+            b = b[e]
+            if jnp.issubdtype(a.dtype, jnp.floating):
+                tol = 32 * ULP * max(1.0, float(jnp.abs(a).max()))
+                d = float(jnp.abs(a - b).max())
+                worst = max(worst, d)
+                assert d <= tol, f"replica {e} diverged: {d} > {tol}"
+            else:
+                assert jnp.array_equal(a, b), f"replica {e} int/rng leaf"
+        np.testing.assert_allclose(np.asarray(ms["loss"]),
+                                   np.asarray(mf["loss"][e]), rtol=1e-6)
+    print(f"  equivalence: {len(specs)} replicas vs solo, "
+          f"max |float leaf diff| {worst:.2e} (ints/rng bit-exact)")
+    result["equivalence"] = {"replicas": len(specs),
+                             "max_float_leaf_diff": worst}
+
+
+def bench_padded_sweep(result):
+    """The fig6 satellite in isolation: run_cpsl N_m variants padded to
+    one shared shape reuse ONE compiled executable — first variant pays
+    the compile, the rest dispatch into the cache. Reuse is asserted on
+    the whole-curve jit's cache-entry count (deterministic, immune to
+    shared-runner timing noise); wall times are reported for context."""
+    data = bc.make_data(n_train=1500, n_test=300, n_devices=12,
+                        samples_per_device=100)
+    rows = []
+    for nm in (2, 3, 6):
+        n0 = CPSL._run_training_fused._cache_size()
+        h = bc.run_cpsl(data, rounds=2, cluster_size=nm,
+                        n_clusters=12 // nm, eval_every=2,
+                        pad_to=(6, 6), measure_steady=True)
+        rows.append({"cluster_size": nm, "first_call_s": h["first_call_s"],
+                     "steady_s": h["steady_s"], "compile_s": h["compile_s"],
+                     "new_compiles": CPSL._run_training_fused._cache_size()
+                     - n0,
+                     "final_acc": h["acc"][-1]})
+        print(f"  N_m={nm}: first call {h['first_call_s']:5.1f}s "
+              f"(compile {h['compile_s']:.1f}s, steady {h['steady_s']:.1f}s, "
+              f"new compiles {rows[-1]['new_compiles']})")
+    assert rows[0]["new_compiles"] >= 1, rows
+    for row in rows[1:]:
+        assert row["new_compiles"] == 0, \
+            f"padded variant recompiled: {rows}"
+    result["padded_sweep"] = rows
+
+
+def main(quick=True, replicas=8, rounds=None, out=None):
+    out = out or os.environ.get("FLEET_BENCH_JSON", "/tmp/bench_fleet.json")
+    rounds = rounds or (3 if quick else 5)
+    eval_every = rounds  # eval on the final round only
+    result = {"quick": quick}
+    print(f"experiment fleet: {replicas} replicas (lr x seed grid) x "
+          f"{rounds} rounds, LeNet M={M} K={K} B={B} L={L} cut={CUT}:")
+    specs, plan, dsd, cpf, states, mf, lr_scale, _ = bench_speedup(
+        rounds, replicas, eval_every, result)
+    bench_equivalence(specs, plan, dsd, cpf, states, mf, lr_scale,
+                      eval_every, result)
+    print("padded run_cpsl sweep (shared executable):")
+    bench_padded_sweep(result)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"results -> {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="fewer rounds (default)")
+    mode.add_argument("--full", action="store_true")
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(quick=not args.full, replicas=args.replicas, rounds=args.rounds,
+         out=args.out)

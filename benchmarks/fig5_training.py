@@ -1,6 +1,11 @@
 """Paper Fig. 5: training performance of CPSL vs CL / vanilla SL / FL on
 non-IID data — (a) accuracy vs training rounds, (b) accuracy vs overall
-(simulated wireless) training time."""
+(simulated wireless) training time.
+
+The CPSL and SL curves run on the fused training-curve path
+(``CPSL.run_training_fused`` via ``bench_common.run_cpsl``): the whole
+curve is one dispatch with in-jit per-round evaluation, instead of a
+Python round loop with host-side eval."""
 from __future__ import annotations
 
 from benchmarks import bench_common as bc

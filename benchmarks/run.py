@@ -10,9 +10,10 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (bench_dynamics, bench_planner, bench_round,
-                        fig5_training, fig6_cluster_size, fig7_cut_layer,
-                        fig8_resource, roofline, table2_latency)
+from benchmarks import (bench_dynamics, bench_fleet, bench_planner,
+                        bench_round, fig5_training, fig6_cluster_size,
+                        fig7_cut_layer, fig8_resource, roofline,
+                        table2_latency)
 
 BENCHES = {
     "table2_latency": table2_latency.main,
@@ -24,6 +25,7 @@ BENCHES = {
     "bench_dynamics": bench_dynamics.main,
     "bench_planner": bench_planner.main,
     "bench_round": bench_round.main,
+    "bench_fleet": bench_fleet.main,
 }
 
 

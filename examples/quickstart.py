@@ -3,14 +3,17 @@
 Trains the paper's LeNet with CPSL on synthetic non-IID MNIST for a few
 rounds, with the full control plane active: SAA cut-layer selection
 (Alg. 2), Gibbs clustering + greedy spectrum (Algs. 3/4), the wireless
-latency simulator, checkpointing, and FedAvg aggregation.
+latency simulator, checkpointing, and FedAvg aggregation — then re-runs
+the training as an experiment FLEET: a seed x cluster-size grid of
+whole training curves compiled once and executed as one batched program
+(``CPSL.run_fleet`` via ``FleetRunner``), with in-jit test-set eval.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
-from repro.configs.base import CPSLConfig
+from repro.configs.base import CPSLConfig, FleetConfig
 from repro.core.channel import NetworkCfg
 from repro.core.cpsl import CPSL
 from repro.core.profile import lenet_profile
@@ -19,7 +22,7 @@ from repro.core.splitting import make_split_model
 from repro.data.pipeline import CPSLDataset
 from repro.data.synthetic import non_iid_split, synthetic_mnist
 from repro.models import lenet
-from repro.train.trainer import CPSLTrainer, TrainerCfg
+from repro.train.trainer import CPSLTrainer, FleetRunner, TrainerCfg
 
 
 def main():
@@ -55,6 +58,25 @@ def main():
         print(f"round {h['round']:2d}  loss {h['loss']:.3f}  "
               f"acc {h['eval']:.3f}  wireless latency {h['sim_latency_s']:.2f}s "
               f"(cum {h['sim_time_s']:.1f}s)")
+
+    # -- experiment fleet: the sweep grid as ONE batched program ----------
+    # 2 seeds x 2 cluster sizes = 4 whole training curves, padded to a
+    # shared layout shape, compiled once, dispatched once; eval runs
+    # in-jit every 4 rounds on the device-resident test split
+    fleet_ccfg = CPSLConfig(cut_layer=v_star, conv_impl="im2col",
+                            scan_rounds=True, fused_round_unroll=1)
+    fcfg = FleetConfig(rounds=8, seeds=(0, 1), cluster_sizes=(5, 10),
+                       n_devices=30, eval_every=4)
+    fleet = FleetRunner(xtr, ytr, fcfg, fleet_ccfg, xte=xte, yte=yte,
+                        prof=prof, ncfg=ncfg)
+    result = fleet.run()
+    print(f"\nfleet: {result['n_replicas']} replicas (seed x N_m grid) "
+          f"in {result['wall_s']:.1f}s wall (one compile, one dispatch)")
+    for rep in result["replicas"]:
+        print(f"  N_m={rep['cluster_size']:2d} seed={rep['seed']}  "
+              f"final loss {rep['loss'][-1]:.3f}  "
+              f"acc {rep['acc'][-1]:.3f}  "
+              f"sim time {rep['sim_time_s'][-1]:.1f}s")
 
 
 if __name__ == "__main__":

@@ -162,6 +162,49 @@ class CPSLConfig:
     straggler_dropout: float = 0.0   # fraction of clients allowed to miss FedAvg
     compress_uploads: str = "none"   # none | topk | int8 (device-model uploads)
     compress_topk: float = 0.1
+    scan_rounds: bool = False        # run_training_fused round axis as a
+                                     # lax.scan (R-independent compile) instead
+                                     # of a trace-time unroll; needs a
+                                     # loop-body-safe lowering on XLA:CPU —
+                                     # pair with conv_impl="im2col" (direct
+                                     # conv grads in while bodies hit the
+                                     # naive emitter, ~36x, measured)
+    conv_impl: str = "direct"        # lenet conv lowering: "direct" (lax conv,
+                                     # fastest solo) | "im2col" (matmul form —
+                                     # batches cleanly under vmap over client/
+                                     # replica weights and stays fast inside
+                                     # scans; forward bit-identical, tested).
+                                     # Consumed at split-model build time
+                                     # (make_split_model("lenet", v,
+                                     # conv_impl=...))
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Experiment fleet: E = len(seeds) x len(cluster_sizes) x len(lrs)
+    CPSL training replicas executed as ONE batched program
+    (``CPSL.run_fleet``; built/driven by ``train.trainer.FleetRunner``).
+
+    Replicas differ only in data — per-replica seeds (init + non-IID
+    shard draws + batch streams), cluster layouts padded to the grid's
+    (max M, max K) with masks, and learning rates applied as traced
+    scalars — so the whole grid shares one XLA compile."""
+    rounds: int = 10
+    seeds: Tuple[int, ...] = (0,)
+    cluster_sizes: Tuple[int, ...] = (5,)   # N_m grid axis (fig. 6)
+    lr_scales: Tuple[float, ...] = ()       # lr grid axis, multiplying the
+                                            # CPSLConfig lrs; () = base lr only
+    n_devices: int = 30                     # N (shards drawn per seed)
+    eval_every: int = 0                     # in-jit eval cadence; 0 = off
+    samples_per_device: int = 180           # non-IID shard size
+
+    @property
+    def n_replicas(self) -> int:
+        return (len(self.seeds) * len(self.cluster_sizes)
+                * max(len(self.lr_scales), 1))
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
 
 
 @dataclass(frozen=True)

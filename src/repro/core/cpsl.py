@@ -15,19 +15,28 @@ Two train-step implementations:
                   device BP. Bit-identical updates (tested); used to
                   demonstrate faithfulness and to price the phases.
 
-Two round orchestrations:
+Three orchestration levels, each one jit bigger than the last:
   - ``run_round``:       the readable reference — one jitted step per
                          (cluster, local epoch) plus one jitted FedAvg per
                          cluster, batches gathered host-side.
-  - ``run_round_fused``: the performance path — the whole round is ONE
-                         donated jit (``lax.scan`` over the cluster axis,
-                         local epochs unrolled in the body) with
-                         device-resident data gathered in-jit and FedAvg
-                         folded in at cluster boundaries. Reproduces
-                         ``run_round`` at the same seeds and lowering:
-                         ints/rng bit-exact, floats ULP-equal per leaf
-                         (tests/test_fused_round.py); see
-                         ``CPSLConfig.fused_round`` / ``unroll_clients``.
+  - ``run_round_fused``: the whole round as ONE donated jit (``lax.scan``
+                         over the cluster axis, local epochs unrolled in
+                         the body) with device-resident data gathered
+                         in-jit and FedAvg folded in at cluster
+                         boundaries. Reproduces ``run_round`` at the same
+                         seeds and lowering: ints/rng bit-exact, floats
+                         ULP-equal per leaf (tests/test_fused_round.py);
+                         see ``CPSLConfig.fused_round`` /
+                         ``unroll_clients``.
+  - ``run_training_fused`` / ``run_fleet``: the whole R-round training
+                         CURVE as one donated jit (round axis unrolled,
+                         or scanned via ``CPSLConfig.scan_rounds`` +
+                         the im2col conv lowering) with periodic in-jit
+                         eval — and its ``jax.vmap`` over E experiment
+                         replicas whose seeds, shard tables, eq.-8
+                         weights, learning rates, and padded layouts all
+                         enter as data, so a whole sweep grid is one
+                         compile + one dispatch (tests/test_fleet.py).
 
 Vanilla SL is CPSL with cluster_size=1 / n_clusters=N (paper §III). FL is
 the v=V degenerate case (`FLTrainer`).
@@ -45,6 +54,25 @@ from repro.configs.base import CPSLConfig
 from repro.core import compression as cmp
 from repro.core import partitioning as pt
 from repro.core.splitting import SplitModel
+
+
+def _register_barrier_batching():
+    """jax 0.4.x has no batching rule for ``optimization_barrier`` (added
+    upstream later as the identity rule below); the fleet path vmaps the
+    fused round — which pins its program boundaries with barriers — over
+    the replica axis, so register the trivial rule when missing."""
+    try:
+        from jax._src.lax import lax as _lax_internal
+        from jax.interpreters import batching as _batching
+    except ImportError:        # pragma: no cover - future jax layouts
+        return
+    prim = getattr(_lax_internal, "optimization_barrier_p", None)
+    if prim is not None and prim not in _batching.primitive_batchers:
+        _batching.primitive_batchers[prim] = (
+            lambda args, dims, **params: (prim.bind(*args, **params), dims))
+
+
+_register_barrier_batching()
 
 
 def _flat(tree):
@@ -134,14 +162,17 @@ class CPSL:
 
     # -- fused step ----------------------------------------------------------
 
-    def fused_step_impl(self, state, batch):
+    def fused_step_impl(self, state, batch, lr_scale=None):
         """Unjitted fused step — the dry-run wraps this with explicit
         in/out shardings; interactive use goes through the jitted method.
 
         ccfg.microbatches > 1 splits the per-client batch B and
         accumulates gradients over a rematted scan (activation memory
         scales 1/m; the straggler/latency model is unaffected — the
-        device still processes B samples per epoch)."""
+        device still processes B samples per epoch).
+
+        ``lr_scale``: optional traced scalar multiplying both optimizers'
+        learning rates (fleet per-replica hyper-parameters as data)."""
         grad_fn = jax.value_and_grad(self._total_loss, argnums=(0, 1),
                                      has_aux=True)
         m = self.ccfg.microbatches
@@ -170,9 +201,11 @@ class CPSL:
             (_, metrics), (g_dev, g_srv) = grad_fn(state["dev"],
                                                    state["srv"], batch)
         new_dev, dev_opt = self.dev_opt.step(g_dev, state["dev_opt"],
-                                             state["dev"], state["step"])
+                                             state["dev"], state["step"],
+                                             lr_scale=lr_scale)
         new_srv, srv_opt = self.srv_opt.step(g_srv, state["srv_opt"],
-                                             state["srv"], state["step"])
+                                             state["srv"], state["step"],
+                                             lr_scale=lr_scale)
         state = dict(state, dev=new_dev, dev_opt=dev_opt, srv=new_srv,
                      srv_opt=srv_opt, step=state["step"] + 1)
         return state, metrics
@@ -186,7 +219,7 @@ class CPSL:
 
     # -- explicit two-phase protocol step -------------------------------------
 
-    def protocol_step_impl(self, state, batch):
+    def protocol_step_impl(self, state, batch, lr_scale=None):
         assert not self.ccfg.share_device_params
         split = self.split
 
@@ -212,7 +245,8 @@ class CPSL:
             srv_loss, argnums=(0, 1), has_aux=True)(state["srv"],
                                                     smashed_flat)
         new_srv, srv_opt = self.srv_opt.step(g_srv, state["srv_opt"],
-                                             state["srv"], state["step"])
+                                             state["srv"], state["step"],
+                                             lr_scale=lr_scale)
 
         # Phase 3 (eq. 7): device BP from the smashed gradient
         g_smashed = g_smashed.reshape(smashed.shape)
@@ -232,7 +266,8 @@ class CPSL:
                                                              batch,
                                                              g_smashed)
         new_dev, dev_opt = self.dev_opt.step(g_dev, state["dev_opt"],
-                                             state["dev"], state["step"])
+                                             state["dev"], state["step"],
+                                             lr_scale=lr_scale)
         state = dict(state, dev=new_dev, dev_opt=dev_opt, srv=new_srv,
                      srv_opt=srv_opt, step=state["step"] + 1)
         return state, {"loss": loss, "aux": jnp.zeros(())}
@@ -359,9 +394,35 @@ class CPSL:
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def _run_round_fused(self, state, data, idx, weights):
+        M, L = idx.shape[:2]
+        state, losses = self._cluster_scan(state, data, idx, weights)
+        return state, losses.reshape(M * L)
+
+    def _cluster_scan(self, state, data, idx, weights, cluster_mask=None,
+                      client_mask=None, lr_scale=None):
+        """One round's scan over the cluster axis; the shared body of
+        ``_run_round_fused``, ``run_training_fused`` and ``run_fleet``.
+        Returns ``(state, losses)`` with losses shaped (M, L).
+
+        ``cluster_mask`` (M,) bool: padded cluster slots run (the fleet's
+        replicas share one program) but their state update — including
+        the rng stream and step counter — is discarded, so a replica with
+        fewer real clusters than the padded layout reproduces its solo
+        run; their losses come back NaN. ``client_mask`` (M, K) bool is
+        injected into the batch as a per-sample weight mask: padded
+        client rows carry exactly zero loss weight, so neither the
+        server gradients nor (via zero eq.-8 weights) FedAvg ever see
+        their data. ``lr_scale`` threads a traced per-run lr multiplier
+        into both optimizers."""
         M, L, K, B = idx.shape
         step_impl = (self.fused_step_impl if self.ccfg.fused_step
                      else self.protocol_step_impl)
+        masked = cluster_mask is not None or client_mask is not None
+        if masked:
+            if cluster_mask is None:
+                cluster_mask = jnp.ones((M,), bool)
+            if client_mask is None:
+                client_mask = jnp.ones((M, K), bool)
 
         # Scan over the cluster axis (the paper's sequential eq.-9
         # dimension) with the L local epochs unrolled inside the body, so
@@ -371,7 +432,18 @@ class CPSL:
         # contraction than the looped path's top-level _fedavg jit
         # (observed as last-ULP drift in the conv biases).
         def body(st, xs):
-            idx_m, w = xs                           # (L, K, B), (K,)
+            if masked:
+                idx_m, w, keep, km = xs     # (L,K,B), (K,), (), (K,)
+            else:
+                idx_m, w = xs               # (L, K, B), (K,)
+            st_in = st
+            if masked:
+                # enforce the padding contract structurally: padded
+                # client slots must never enter eq.-8 FedAvg even when
+                # the caller left ``weights`` at the uniform default
+                # (real slots multiply by 1.0 — float-exact, so the
+                # bit-exactness contract vs solo runs is untouched)
+                w = w * km.astype(w.dtype)
             losses = []
             for l in range(L):
                 # The looped path runs the batch transfer, each step, and
@@ -385,17 +457,243 @@ class CPSL:
                 # run_round_fused).
                 batch = jax.lax.optimization_barrier(
                     jax.tree.map(lambda a: a[idx_m[l]], data))  # in-jit
-                st, mt = step_impl(st, batch)
+                if masked:
+                    # reserved key, distinct from the LM datasets' per-
+                    # token "mask" field: only losses that implement the
+                    # per-sample-weight semantics read it (lenet; masked
+                    # fleets assert that in run_training_fused/run_fleet)
+                    batch = dict(batch, sample_weight=jnp.broadcast_to(
+                        km[:, None], (K, B)).astype(jnp.float32))
+                st, mt = step_impl(st, batch, lr_scale=lr_scale)
                 st = jax.lax.optimization_barrier(st)
                 losses.append(mt["loss"])
             if not self.ccfg.share_device_params:
                 st = jax.lax.optimization_barrier(self.fedavg_impl(st, w))
-            return st, jnp.stack(losses)
+            losses = jnp.stack(losses)
+            if masked:
+                # padded cluster slot: discard the whole update (state,
+                # rng, step counter) so real clusters see the same
+                # stream/counter a solo run of the unpadded layout would
+                st = jax.tree.map(lambda n, o: jnp.where(keep, n, o),
+                                  st, st_in)
+                losses = jnp.where(keep, losses, jnp.nan)
+            return st, losses
 
-        state, losses = jax.lax.scan(
-            body, state, (idx, weights),
-            unroll=self.ccfg.fused_round_unroll or M)
-        return state, losses.reshape(M * L)
+        xs = ((idx, weights, cluster_mask, client_mask) if masked
+              else (idx, weights))
+        return jax.lax.scan(body, state, xs,
+                            unroll=self.ccfg.fused_round_unroll or M)
+
+    # -- fused training curve (R rounds in ONE donated jit) -------------------
+
+    def _eval_impl(self, state, eval_data):
+        dev0 = jax.tree.map(lambda t: t[0], state["dev"])
+        return self.split.eval_metrics(dev0, state["srv"], eval_data)
+
+    def eval_rounds(self, rounds: int, eval_every: int):
+        """The in-jit eval schedule: every ``eval_every`` rounds plus the
+        final round (host-side mirror of the traced schedule)."""
+        if not eval_every:
+            return []
+        return [r for r in range(rounds)
+                if (r + 1) % eval_every == 0 or r == rounds - 1]
+
+    def _training_impl(self, state, data, idx, weights, lr_scale,
+                       eval_data, cluster_mask, client_mask, eval_every):
+        R = idx.shape[0]
+        do_eval = bool(eval_every) and eval_data is not None
+
+        if self.ccfg.scan_rounds:
+            # Round axis as lax.scan: compile cost is R-independent, but
+            # XLA:CPU lowers *direct* conv gradients inside while-loop
+            # bodies to its naive emitter (~36x, measured) — use the
+            # im2col lowering (conv_impl="im2col"), whose dots stay fast
+            # in loop bodies. Eval rides at block boundaries (requires
+            # eval_every | R), so the schedule matches the unrolled path.
+            def round_body(st, idx_r):
+                st, lm = self._cluster_scan(st, data, idx_r, weights,
+                                            cluster_mask, client_mask,
+                                            lr_scale)
+                return st, lm
+
+            if do_eval:
+                blocks = R // eval_every
+                idx_b = idx.reshape((blocks, eval_every) + idx.shape[1:])
+
+                def block(st, idx_blk):
+                    st, lm = jax.lax.scan(round_body, st, idx_blk)
+                    return st, (lm, self._eval_impl(st, eval_data))
+
+                state, (losses, evals) = jax.lax.scan(block, state, idx_b)
+                losses = losses.reshape((R,) + losses.shape[2:])
+            else:
+                state, losses = jax.lax.scan(round_body, state, idx)
+                evals = None
+        else:
+            # default: rounds unrolled at trace time (compile scales with
+            # R; required for direct-conv models on XLA:CPU)
+            loss_list, eval_list = [], []
+            ev_rounds = set(self.eval_rounds(R, eval_every))
+            for r in range(R):
+                state, lm = self._cluster_scan(state, data, idx[r],
+                                               weights, cluster_mask,
+                                               client_mask, lr_scale)
+                loss_list.append(lm)
+                if do_eval and r in ev_rounds:
+                    eval_list.append(self._eval_impl(state, eval_data))
+            losses = jnp.stack(loss_list)            # (R, M, L)
+            evals = (jax.tree.map(lambda *ts: jnp.stack(ts), *eval_list)
+                     if eval_list else None)
+
+        if cluster_mask is None:
+            loss = losses.mean(axis=(1, 2))          # (R,)
+        else:
+            keep = cluster_mask[None, :, None]
+            loss = (jnp.where(keep, losses, 0.0).sum(axis=(1, 2))
+                    / jnp.maximum(cluster_mask.sum() * losses.shape[2], 1))
+        return state, losses, loss, evals
+
+    @functools.partial(jax.jit, static_argnums=(0, 9), donate_argnums=1)
+    def _run_training_fused(self, state, data, idx, weights, lr_scale,
+                            eval_data, cluster_mask, client_mask,
+                            eval_every):
+        return self._training_impl(state, data, idx, weights, lr_scale,
+                                   eval_data, cluster_mask, client_mask,
+                                   eval_every)
+
+    def run_training_fused(self, state, data, idx, weights=None, *,
+                           lr_scale=None, eval_data=None, eval_every=0,
+                           cluster_mask=None, client_mask=None) -> tuple:
+        """A full R-round training curve as ONE donated jit: the fused
+        round body of ``run_round_fused`` repeated over the round axis
+        (trace-time unroll by default; ``CPSLConfig.scan_rounds`` scans
+        it) with periodic in-jit test-set evaluation carried in the
+        metrics stack — no host sync anywhere in the curve.
+
+        ``idx``      (R, M, L, K, B) int32 index tables — row r is
+                     exactly ``DeviceResidentDataset.round_index_table``
+                     for round r (``training_index_table`` builds the
+                     stack), so round r reproduces the looped
+                     ``run_round_fused`` round-for-round (ints/rng
+                     bit-exact, floats ULP-equal; tests/test_fleet.py).
+        ``weights``  (M, K) eq.-8 data sizes, fixed across rounds
+                     (uniform when None).
+        ``lr_scale`` optional scalar lr multiplier applied as *data*
+                     (see ``repro.optim``).
+        ``eval_data``device-resident eval batch (e.g.
+                     ``DeviceResidentDataset.eval_data``); evaluated via
+                     ``SplitModel.eval_metrics`` every ``eval_every``
+                     rounds plus the final round (``eval_rounds`` gives
+                     the schedule).
+        ``cluster_mask``/``client_mask``: padded-layout masks, see
+                     ``_cluster_scan``.
+
+        Returns ``(state, metrics)``: ``losses`` (R, M*L) device array
+        (NaN on padded cluster slots), ``loss`` (R,) per-round means
+        over real slots, ``eval`` dict of (n_evals,) curves + the
+        matching ``eval_rounds`` list."""
+        R, M, L, K, B = idx.shape
+        assert L == self.ccfg.local_epochs, (L, self.ccfg.local_epochs)
+        if client_mask is not None:
+            assert self.split.masked_loss, \
+                "client_mask needs a SplitModel whose server_loss " \
+                "implements the sample_weight semantics (lenet)"
+        if eval_every:
+            assert self.split.eval_metrics is not None, \
+                "eval_every > 0 needs a SplitModel with eval_metrics"
+            assert eval_data is not None, "eval_every > 0 needs eval_data"
+            if self.ccfg.scan_rounds:
+                assert R % eval_every == 0, \
+                    "scan_rounds needs eval_every to divide rounds"
+        if weights is None:
+            weights = jnp.ones((M, K), jnp.float32)
+        state, losses, loss, evals = self._run_training_fused(
+            state, data, jnp.asarray(idx),
+            jnp.asarray(weights, jnp.float32), lr_scale, eval_data,
+            cluster_mask, client_mask, int(eval_every))
+        metrics = {"losses": losses.reshape(R, M * L), "loss": loss}
+        if evals is not None:
+            metrics["eval"] = evals
+            metrics["eval_rounds"] = self.eval_rounds(R, eval_every)
+        return state, metrics
+
+    # -- experiment fleet (E replicas x R rounds, one batched program) --------
+
+    def init_fleet_state(self, seeds) -> dict:
+        """Stacked per-replica states; replica r == ``init_state(
+        PRNGKey(seeds[r]))`` bit-for-bit (the fleet contract's solo
+        reference)."""
+        states = [self.init_state(jax.random.PRNGKey(int(s)))
+                  for s in seeds]
+        return jax.tree.map(lambda *ts: jnp.stack(ts), *states)
+
+    @functools.partial(jax.jit, static_argnums=(0, 9), donate_argnums=1)
+    def _run_fleet(self, states, data, idx, weights, lr_scale, eval_data,
+                   cluster_mask, client_mask, eval_every):
+        ax = lambda x: None if x is None else 0  # noqa: E731
+
+        def one(state, idx_e, w_e, ls_e, cm_e, km_e):
+            return self._training_impl(state, data, idx_e, w_e, ls_e,
+                                       eval_data, cm_e, km_e, eval_every)
+
+        return jax.vmap(one, in_axes=(0, 0, 0, ax(lr_scale),
+                                      ax(cluster_mask), ax(client_mask)))(
+            states, idx, weights, lr_scale, cluster_mask, client_mask)
+
+    def run_fleet(self, states, data, idx, weights=None, *, lr_scale=None,
+                  eval_data=None, eval_every=0, cluster_mask=None,
+                  client_mask=None) -> tuple:
+        """E whole training curves as ONE batched program:
+        ``jax.vmap`` of the ``run_training_fused`` body over the replica
+        axis. Replicas differ only in *data* — seeds (``states`` rows),
+        non-IID shard draws (``idx`` tables), eq.-8 ``weights``,
+        per-replica ``lr_scale``, and padded-layout masks — so one XLA
+        compile serves the whole grid, and on accelerators the replica
+        axis is free to shard.
+
+        ``states``   stacked replica states (``init_fleet_state``).
+        ``idx``      (E, R, M, L, K, B); per-replica layouts padded to
+                     the common (M, K) with ``cluster_mask`` (E, M) /
+                     ``client_mask`` (E, M, K) marking real slots
+                     (``data.pipeline.fleet_plan`` builds all of these).
+        ``eval_data``shared device-resident eval batch (not batched
+                     over replicas).
+
+        Contract (tests/test_fleet.py, benchmarks/bench_fleet.py):
+        replica r is bit-exact (ints/rng) and ULP-equal per leaf
+        (floats) to the solo ``run_training_fused`` run with seed r at
+        the same layout/lr. Masked (padded) slots never contribute:
+        perturbing a padded slot's indices leaves every output
+        bit-identical."""
+        E, R, M, L, K, B = idx.shape
+        assert L == self.ccfg.local_epochs, (L, self.ccfg.local_epochs)
+        if client_mask is not None:
+            assert self.split.masked_loss, \
+                "client_mask needs a SplitModel whose server_loss " \
+                "implements the sample_weight semantics (lenet)"
+        if eval_every:
+            assert self.split.eval_metrics is not None, \
+                "eval_every > 0 needs a SplitModel with eval_metrics"
+            assert eval_data is not None, "eval_every > 0 needs eval_data"
+            if self.ccfg.scan_rounds:
+                assert R % eval_every == 0, \
+                    "scan_rounds needs eval_every to divide rounds"
+        if weights is None:
+            weights = jnp.ones((E, M, K), jnp.float32)
+        if lr_scale is not None:
+            lr_scale = jnp.asarray(lr_scale, jnp.float32)
+            assert lr_scale.shape == (E,), lr_scale.shape
+        states, losses, loss, evals = self._run_fleet(
+            states, data, jnp.asarray(idx),
+            jnp.asarray(weights, jnp.float32), lr_scale, eval_data,
+            None if cluster_mask is None else jnp.asarray(cluster_mask),
+            None if client_mask is None else jnp.asarray(client_mask),
+            int(eval_every))
+        metrics = {"losses": losses.reshape(E, R, M * L), "loss": loss}
+        if evals is not None:
+            metrics["eval"] = evals
+            metrics["eval_rounds"] = self.eval_rounds(R, eval_every)
+        return states, metrics
 
     def export_params(self, state):
         dev0 = jax.tree.map(lambda t: t[0], state["dev"])

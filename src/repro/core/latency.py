@@ -212,6 +212,33 @@ def round_latency(v: int, clusters: Sequence[Sequence[int]],
                for ds, x in zip(clusters, xs))
 
 
+def equal_split_curve(v: int, clusters: Sequence[Sequence[int]],
+                      ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
+                      rounds: int, seed: int,
+                      sl: bool = False) -> list:
+    """Cumulative per-round wireless latency of a FIXED cluster layout
+    under the equal spectrum split, networks redrawn each round from
+    ``device_means(ncfg, seed)`` — the shared pricing loop behind the
+    fig. 5/6 benchmarks and ``train.trainer.FleetRunner`` (their only
+    difference is the cut convention each passes as ``v``). ``sl``
+    prices the vanilla-SL sequential schedule instead."""
+    from repro.core.channel import device_means, sample_network
+
+    mu_f, mu_snr = device_means(ncfg, seed)
+    rng = np.random.default_rng(seed)
+    K = len(clusters[0])
+    xs = [np.full(K, max(ncfg.n_subcarriers // K, 1))] * len(clusters)
+    t, out = 0.0, []
+    for _ in range(rounds):
+        net = sample_network(ncfg, mu_f, mu_snr, rng)
+        if sl:
+            t += vanilla_sl_round_latency(v, net, ncfg, prof, B)
+        else:
+            t += round_latency(v, clusters, xs, net, ncfg, prof, B, L)
+        out.append(float(t))
+    return out
+
+
 # -- benchmark comparators (paper §VIII-B) ----------------------------------
 
 def vanilla_sl_round_latency(v: int, net: NetworkState, ncfg: NetworkCfg,

@@ -45,6 +45,15 @@ class SplitModel:
     server_loss: Callable           # (srv, smashed, batch) -> (loss, aux)
     export: Callable                # (dev, srv) -> (params, cfg)
     smashed_spec: Callable          # (batch_size, seq) -> ShapeDtypeStruct
+    eval_metrics: Optional[Callable] = None
+    # (dev, srv, eval_batch) -> {"acc", "loss"}; jit-safe, used by the
+    # fused training curve for in-jit test-set evaluation (None = the
+    # family has no packaged eval; run_training_fused then disallows
+    # eval_every > 0)
+    masked_loss: bool = False
+    # True when server_loss implements the reserved per-sample
+    # ``batch["sample_weight"]`` semantics that padded fleet layouts
+    # (client_mask) rely on; fleets with masks assert it
 
 
 # --------------------------------------------------------------------------
@@ -208,7 +217,12 @@ def make_encdec_split(cfg: ModelConfig, v: int) -> SplitModel:
 # LeNet (paper) split
 # --------------------------------------------------------------------------
 
-def make_lenet_split(v: int, input_hw: int = 28) -> SplitModel:
+def make_lenet_split(v: int, input_hw: int = 28,
+                     conv_impl: str = "direct") -> SplitModel:
+    """``conv_impl``: "direct" (lax conv, fastest solo on XLA:CPU) or
+    "im2col" (matmul form — required for vmapped fleets and scanned
+    round axes, see ``models.lenet.conv_im2col``). Params are identical
+    between the two; only the apply lowering differs."""
     def init_device(key):
         return ln.split_params(ln.init(key, input_hw), v)[0]
 
@@ -216,14 +230,21 @@ def make_lenet_split(v: int, input_hw: int = 28) -> SplitModel:
         return ln.split_params(ln.init(key, input_hw), v)[1]
 
     def device_apply(dev, batch):
-        return (ln.apply_range(dev, batch["image"], 0, v),
+        return (ln.apply_range(dev, batch["image"], 0, v, conv_impl),
                 jnp.zeros((), jnp.float32))
 
     def server_loss(srv, smashed, batch):
-        logits = ln.apply_range(srv, smashed, v, ln.N_LAYERS)
+        logits = ln.apply_range(srv, smashed, v, ln.N_LAYERS, conv_impl)
         logp = jax.nn.log_softmax(logits)
         nll = -jnp.take_along_axis(logp, batch["label"][:, None], axis=-1)
-        return jnp.mean(nll), jnp.zeros((), jnp.float32)
+        weight = batch.get("sample_weight")
+        if weight is None:
+            return jnp.mean(nll), jnp.zeros((), jnp.float32)
+        # padded client slots (fleet layout masks): masked rows carry
+        # exactly zero weight, so their data never reaches loss or grads
+        w = weight.reshape(-1).astype(nll.dtype)
+        loss = (nll[:, 0] * w).sum() / jnp.maximum(w.sum(), 1.0)
+        return loss, jnp.zeros((), jnp.float32)
 
     def export(dev, srv):
         return ln.merge_params(dev, srv), None
@@ -232,9 +253,20 @@ def make_lenet_split(v: int, input_hw: int = 28) -> SplitModel:
         shp = ln.layer_shapes(input_hw)[v - 1]
         return jax.ShapeDtypeStruct((batch_size,) + tuple(shp), jnp.float32)
 
+    def eval_metrics(dev, srv, batch):
+        """In-jit test-set metrics; host-equivalent of export +
+        ``lenet.accuracy`` (tests pin the agreement)."""
+        smashed = ln.apply_range(dev, batch["image"], 0, v, conv_impl)
+        logits = ln.apply_range(srv, smashed, v, ln.N_LAYERS, conv_impl)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, batch["label"][:, None], axis=-1)
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))
+        return {"acc": acc, "loss": jnp.mean(nll)}
+
     return SplitModel("lenet", None, v, ln.N_LAYERS - 1, init_device,
                       init_server, device_apply, server_loss, export,
-                      smashed_spec)
+                      smashed_spec, eval_metrics, masked_loss=True)
 
 
 def make_split_model(cfg_or_name, v: int, **kw) -> SplitModel:

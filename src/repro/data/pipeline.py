@@ -10,10 +10,16 @@ the full dataset is uploaded to the accelerator once, and each round the
 host precomputes only a small (M, L, K, B) int32 index table — drawn from
 the SAME rng streams ``cluster_batch`` uses — that
 ``CPSL.run_round_fused`` gathers inside the jit. No per-step host
-transfer, bit-identical batches.
+transfer, bit-identical batches. ``training_index_table`` stacks R of
+those tables for the whole-curve jit (``CPSL.run_training_fused``), the
+optional eval split rides along device-resident for the in-jit test-set
+evaluation, and ``fleet_plan`` pads per-replica layouts/shards to a
+common shape (+ masks) for the batched experiment fleet
+(``CPSL.run_fleet``).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -23,6 +29,30 @@ def shard_sizes(device_indices: List[np.ndarray],
                 devices: Sequence[int]) -> np.ndarray:
     """Per-device local dataset sizes |D_{m,k}| — the eq. (8) weights."""
     return np.array([len(device_indices[d]) for d in devices], np.float32)
+
+
+def round_index_table(device_indices: List[np.ndarray], batch: int,
+                      clusters: Sequence[Sequence[int]], seed: int,
+                      rnd: int, local_epochs: int) -> np.ndarray:
+    """(M, L, K, B) int32 global sample indices for one round; row
+    (m, l, k) is exactly the pick ``CPSLDataset.cluster_batch`` would
+    draw for device ``clusters[m][k]`` at ``batch_seed(seed, rnd, m, l)``
+    (same ``default_rng`` stream, same per-device call order — draws are
+    prefix-stable, so appending padded slots never changes real rows).
+    Host-side and numpy-only, so fleet builders can derive tables for
+    many replicas without mirroring the data arrays per replica."""
+    M, K = len(clusters), len(clusters[0])
+    out = np.empty((M, local_epochs, K, batch), np.int32)
+    for m, devices in enumerate(clusters):
+        assert len(devices) == K, \
+            "fused round needs rectangular (padded) clusters"
+        for l in range(local_epochs):
+            rng = np.random.default_rng(batch_seed(seed, rnd, m, l))
+            for k, d in enumerate(devices):
+                idx = device_indices[d]
+                out[m, l, k] = rng.choice(idx, batch,
+                                          replace=len(idx) < batch)
+    return out
 
 
 def batch_seed(seed: int, rnd: int, m: int, l: int) -> int:
@@ -75,7 +105,8 @@ class DeviceResidentDataset:
 
     def __init__(self, images: np.ndarray, labels: np.ndarray,
                  device_indices: List[np.ndarray], batch: int,
-                 field_names=("image", "label")):
+                 field_names=("image", "label"), eval_images=None,
+                 eval_labels=None):
         # deferred so the host-side pipeline stays importable without jax
         # (the engine's train=False control plane uses it numpy-only)
         import jax.numpy as jnp
@@ -84,10 +115,19 @@ class DeviceResidentDataset:
         self.device_indices = [np.asarray(d) for d in device_indices]
         self.B = batch
         self.fields = field_names
+        # eval split residency: uploaded once alongside the training
+        # arrays so the fused training curve evaluates in-jit with no
+        # host transfer (CPSL.run_training_fused eval_data=...)
+        self.eval_data: Optional[dict] = None
+        if eval_images is not None:
+            self.eval_data = {field_names[0]: jnp.asarray(eval_images),
+                              field_names[1]: jnp.asarray(eval_labels)}
 
     @classmethod
-    def from_dataset(cls, ds: "CPSLDataset") -> "DeviceResidentDataset":
-        return cls(ds.x, ds.y, ds.device_indices, ds.B, ds.fields)
+    def from_dataset(cls, ds: "CPSLDataset", eval_images=None,
+                     eval_labels=None) -> "DeviceResidentDataset":
+        return cls(ds.x, ds.y, ds.device_indices, ds.B, ds.fields,
+                   eval_images, eval_labels)
 
     @classmethod
     def coerce(cls, dataset) -> "DeviceResidentDataset":
@@ -119,18 +159,89 @@ class DeviceResidentDataset:
         """(M, L, K, B) int32 global sample indices for one round; row
         (m, l, k) is exactly the pick ``cluster_batch`` would draw for
         device ``clusters[m][k]`` at ``batch_seed(seed, rnd, m, l)``."""
-        M, K = len(clusters), len(clusters[0])
-        out = np.empty((M, local_epochs, K, self.B), np.int32)
-        for m, devices in enumerate(clusters):
-            assert len(devices) == K, \
-                "fused round needs rectangular (padded) clusters"
-            for l in range(local_epochs):
-                rng = np.random.default_rng(batch_seed(seed, rnd, m, l))
-                for k, d in enumerate(devices):
-                    idx = self.device_indices[d]
-                    out[m, l, k] = rng.choice(idx, self.B,
-                                              replace=len(idx) < self.B)
-        return out
+        return round_index_table(self.device_indices, self.B, clusters,
+                                 seed, rnd, local_epochs)
+
+    def training_index_table(self, clusters: Sequence[Sequence[int]],
+                             seed: int, rounds: int, local_epochs: int
+                             ) -> np.ndarray:
+        """(R, M, L, K, B): the round tables for a whole training curve
+        (row r == ``round_index_table(..., rnd=r, ...)``), feeding
+        ``CPSL.run_training_fused``."""
+        return np.stack([self.round_index_table(clusters, seed, r,
+                                                local_epochs)
+                         for r in range(rounds)])
+
+
+@dataclass
+class FleetPlan:
+    """Padded per-replica tables for ``CPSL.run_fleet``.
+
+    ``idx`` (E, R, M, L, K, B) int32 — replica e's training index table,
+    zero-filled on padded slots; ``weights`` (E, M, K) eq.-8 data sizes
+    with exact zeros on padded client slots (so FedAvg never weighs
+    them); ``cluster_mask`` (E, M) / ``client_mask`` (E, M, K) mark the
+    real slots (both ``None`` when every replica already has the common
+    shape — the masked and unmasked fleets compile different programs,
+    and a homogeneous fleet must stay on the mask-free one to preserve
+    bit-exactness against solo runs)."""
+    idx: np.ndarray
+    weights: np.ndarray
+    cluster_mask: Optional[np.ndarray]
+    client_mask: Optional[np.ndarray]
+    layouts: List[List[List[int]]]
+    seeds: List[int]
+
+    @property
+    def n_replicas(self) -> int:
+        return self.idx.shape[0]
+
+
+def fleet_plan(shards: List[List[np.ndarray]], batch: int,
+               layouts: List[List[List[int]]], seeds: Sequence[int],
+               rounds: int, local_epochs: int,
+               pad_to: Optional[tuple] = None) -> FleetPlan:
+    """Build the batched-fleet tables: replica e draws its batches from
+    shard table ``shards[e]`` over its own (rectangular) cluster layout
+    ``layouts[e]`` with batch-seed stream ``seeds[e]``, then everything
+    is padded to the grid's (max M, max K).
+
+    Real rows are built on the *unpadded* layout, so they are
+    bit-identical to the tables a solo run of that replica would use;
+    padded slots get index 0 (a valid gather) and are masked out of the
+    loss, FedAvg, and metrics by the masks — ``CPSL.run_fleet`` promises
+    perturbing them changes nothing.
+
+    ``pad_to``: explicit (M, K) target overriding the grid max — lets
+    sweep callers pad every variant (even solo, E=1) to one shared
+    shape so they all reuse one compiled executable."""
+    E = len(layouts)
+    assert len(shards) == E and len(seeds) == E, (len(shards), len(seeds))
+    Ms = [len(lay) for lay in layouts]
+    Ks = [len(lay[0]) for lay in layouts]
+    M, K = pad_to if pad_to is not None else (max(Ms), max(Ks))
+    assert M >= max(Ms) and K >= max(Ks), (pad_to, Ms, Ks)
+    homogeneous = all(m == M for m in Ms) and all(k == K for k in Ks)
+
+    idx = np.zeros((E, rounds, M, local_epochs, K, batch), np.int32)
+    weights = np.zeros((E, M, K), np.float32)
+    cmask = np.zeros((E, M), bool)
+    kmask = np.zeros((E, M, K), bool)
+    for e, (lay, sh, seed) in enumerate(zip(layouts, shards, seeds)):
+        for lay_m in lay:
+            assert len(lay_m) == Ks[e], "replica layouts must be rectangular"
+        real = np.stack([round_index_table(sh, batch, lay, seed, r,
+                                           local_epochs)
+                         for r in range(rounds)])
+        idx[e, :, :Ms[e], :, :Ks[e]] = real
+        weights[e, :Ms[e], :Ks[e]] = np.stack(
+            [shard_sizes(sh, c) for c in lay])
+        cmask[e, :Ms[e]] = True
+        kmask[e, :Ms[e], :Ks[e]] = True
+    return FleetPlan(idx, weights, None if homogeneous else cmask,
+                     None if homogeneous else kmask,
+                     [list(map(list, lay)) for lay in layouts],
+                     [int(s) for s in seeds])
 
 
 class LMClusterData:

@@ -81,10 +81,41 @@ def init(key, input_hw: int = 28) -> dict:
     return params
 
 
-def _apply_layer(params, x, name):
+def conv_im2col(x, w, b, pad):
+    """3x3 conv as im2col + matmul: 9 shifted slices concatenated into
+    patch rows, one dot against the flattened kernel.
+
+    Forward is bit-identical to ``lax.conv_general_dilated`` on XLA:CPU
+    (asserted in tests); the point is the *batched* lowering: under
+    ``jax.vmap`` over per-client / per-replica WEIGHTS a direct conv
+    becomes a grouped convolution (XLA:CPU naive emitter, ~10x slower —
+    see ``CPSLConfig.unroll_clients``), while this form becomes a
+    batched ``dot_general`` (eigen batched gemm). The slice/concat
+    patch extraction has no weight operand, so vmap only grows its
+    batch dim, and — unlike direct convs, which XLA:CPU lowers to its
+    naive emitter inside while-loop bodies (~36x, measured) — the dot
+    stays fast inside ``lax.scan``, enabling scanned round/cluster axes
+    (``CPSLConfig.scan_rounds``)."""
+    B, H, W, C = x.shape
+    if pad == "SAME":
+        x = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+        Ho, Wo = H, W
+    else:
+        Ho, Wo = H - 2, W - 2
+    cols = jnp.concatenate(
+        [x[:, di:di + Ho, dj:dj + Wo, :] for di in range(3)
+         for dj in range(3)], -1)                       # (B, Ho, Wo, 9C)
+    y = cols.reshape(B, Ho * Wo, 9 * C) @ w.astype(x.dtype).reshape(
+        9 * C, -1)
+    return y.reshape(B, Ho, Wo, -1) + b.astype(x.dtype)
+
+
+def _apply_layer(params, x, name, conv_impl="direct"):
     if name.startswith("CONV"):
         _, _, pad = _CONV[name]
         p = params[name]
+        if conv_impl == "im2col":
+            return jax.nn.relu(conv_im2col(x, p["w"], p["b"], pad))
         y = lax.conv_general_dilated(
             x, p["w"].astype(x.dtype), window_strides=(1, 1), padding=pad,
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -109,10 +140,13 @@ def _apply_layer(params, x, name):
     return jax.nn.relu(y) if name != "FC3" else y
 
 
-def apply_range(params: dict, x: jnp.ndarray, lo: int, hi: int):
-    """Run layers [lo, hi). x: (B,28,28,1) if lo==0, else the smashed data."""
+def apply_range(params: dict, x: jnp.ndarray, lo: int, hi: int,
+                conv_impl: str = "direct"):
+    """Run layers [lo, hi). x: (B,28,28,1) if lo==0, else the smashed
+    data. ``conv_impl``: "direct" (lax conv) or "im2col" (vmap/scan
+    friendly matmul form, see ``conv_im2col``)."""
     for name in LAYERS[lo:hi]:
-        x = _apply_layer(params, x, name)
+        x = _apply_layer(params, x, name, conv_impl)
     return x
 
 

@@ -4,6 +4,14 @@ Interface:
     opt = sgd(0.05)
     state = opt.init(params)
     params, state = opt.step(grads, state, params, step=i)
+
+Every ``step`` accepts an optional ``lr_scale`` (a traced scalar) that
+multiplies the schedule's learning rate. Experiment fleets use it to run
+per-replica learning rates as *data* inside one compiled program
+(``CPSL.run_fleet``): with a base lr of 1.0, ``lr_scale=lr_r`` applies
+exactly ``lr_r`` (the 1.0 multiply is exact in floating point), so a
+fleet replica reproduces the solo run whose lr was baked in at trace
+time bit-for-bit.
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ def clip_by_global_norm(grads, max_norm: float):
 @dataclass(frozen=True)
 class Optimizer:
     init: Callable
-    step: Callable  # (grads, state, params, step) -> (params, state)
+    step: Callable  # (grads, state, params, step, lr_scale) -> (params, state)
     name: str = "opt"
 
 
@@ -43,8 +51,10 @@ def sgd(lr: Schedule) -> Optimizer:
     def init(params):
         return ()
 
-    def step_fn(grads, state, params, step=0):
+    def step_fn(grads, state, params, step=0, lr_scale=None):
         lr_t = _lr_at(lr, step)
+        if lr_scale is not None:
+            lr_t = lr_t * lr_scale
         new = jax.tree.map(
             lambda p, g: p - (lr_t * g.astype(jnp.float32)).astype(p.dtype),
             params, grads)
@@ -57,8 +67,10 @@ def momentum(lr: Schedule, beta: float = 0.9) -> Optimizer:
     def init(params):
         return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
 
-    def step_fn(grads, state, params, step=0):
+    def step_fn(grads, state, params, step=0, lr_scale=None):
         lr_t = _lr_at(lr, step)
+        if lr_scale is not None:
+            lr_t = lr_t * lr_scale
         new_m = jax.tree.map(
             lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
         new_p = jax.tree.map(
@@ -75,9 +87,11 @@ def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params)}
 
-    def step_fn(grads, state, params, step=0):
+    def step_fn(grads, state, params, step=0, lr_scale=None):
         t = jnp.asarray(step, jnp.float32) + 1.0
         lr_t = _lr_at(lr, step)
+        if lr_scale is not None:
+            lr_t = lr_t * lr_scale
         m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
                          state["m"], grads)
         v = jax.tree.map(
@@ -134,9 +148,11 @@ def adamw_mixed(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
                 "m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params)}
 
-    def step_fn(grads, state, params, step=0):
+    def step_fn(grads, state, params, step=0, lr_scale=None):
         t = jnp.asarray(step, jnp.float32) + 1.0
         lr_t = _lr_at(lr, step)
+        if lr_scale is not None:
+            lr_t = lr_t * lr_scale
         m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
                          state["m"], grads)
         v = jax.tree.map(

@@ -24,6 +24,7 @@ checkpoint before exit (preemption-safe).
 from __future__ import annotations
 
 import copy
+import dataclasses
 import json
 import os
 import signal
@@ -35,15 +36,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import CPSLConfig
+from repro.configs.base import CPSLConfig, FleetConfig
 from repro.core import latency as lt
 from repro.core import resource as rs
 from repro.core.channel import NetworkCfg, device_means, sample_network
 from repro.core.compression import compression_ratio
 from repro.core.cpsl import CPSL
 from repro.core.latency import CutProfile
+from repro.core.splitting import make_split_model
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.data.pipeline import DeviceResidentDataset, batch_seed
+from repro.data.pipeline import (DeviceResidentDataset, batch_seed,
+                                 fleet_plan)
+from repro.data.synthetic import non_iid_split
 from repro.sim.batched import gibbs_clustering_multichain
 
 
@@ -232,3 +236,127 @@ class CPSLTrainer:
             if self.tcfg.log_path:
                 with open(self.tcfg.log_path, "a") as f:
                     f.write(json.dumps(rec) + "\n")
+
+
+# --------------------------------------------------------------------------
+# Experiment fleets: the sweep grid as one batched program
+# --------------------------------------------------------------------------
+
+class FleetRunner:
+    """Multi-seed / multi-config CPSL experiment fleet: the full
+    ``FleetConfig`` grid (seeds x cluster sizes x lr scales) runs as ONE
+    batched XLA program (``CPSL.run_fleet``) over a shared
+    device-resident dataset, with per-replica non-IID shard tables,
+    padded cluster layouts, and in-jit test-set evaluation.
+
+    Fixed round-robin clustering (the fig. 5/6 setting) — per-round
+    Gibbs planning is host-interactive and stays on ``CPSLTrainer``.
+    Wireless latency is priced per replica host-side from the same
+    equal-spectrum model the fig benchmarks use, so extracted curves
+    carry (round, loss, acc, sim time) like the sequential path's.
+
+    Replica r reproduces the solo ``CPSL.run_training_fused`` run with
+    its (seed, layout, lr) bit-exactly on int/rng leaves and ULP-equal
+    on floats when the grid is homogeneous (tests/test_fleet.py)."""
+
+    def __init__(self, xtr, ytr, fcfg: FleetConfig, ccfg: CPSLConfig,
+                 xte=None, yte=None, model: str = "lenet",
+                 prof: Optional[CutProfile] = None,
+                 ncfg: Optional[NetworkCfg] = None, batch=None):
+        self.fcfg, self.base_ccfg = fcfg, ccfg
+        self.prof, self.ncfg = prof, ncfg
+        B = batch or ccfg.batch_per_device
+        lr_scales = fcfg.lr_scales or (1.0,)
+
+        # the replica grid, row-major: cluster_size x lr_scale x seed
+        self.specs: List[dict] = []
+        for nm in fcfg.cluster_sizes:
+            assert fcfg.n_devices % nm == 0, (fcfg.n_devices, nm)
+            M = fcfg.n_devices // nm
+            layout = [list(range(m * nm, (m + 1) * nm)) for m in range(M)]
+            for ls in lr_scales:
+                for seed in fcfg.seeds:
+                    self.specs.append({"seed": int(seed),
+                                       "cluster_size": int(nm),
+                                       "n_clusters": M,
+                                       "lr_scale": float(ls),
+                                       "layout": layout})
+
+        shards = {s: non_iid_split(
+            ytr, n_devices=fcfg.n_devices,
+            samples_per_device=fcfg.samples_per_device, seed=s)
+            for s in {sp["seed"] for sp in self.specs}}
+        self.plan = fleet_plan(
+            [shards[sp["seed"]] for sp in self.specs], B,
+            [sp["layout"] for sp in self.specs],
+            [sp["seed"] for sp in self.specs],
+            fcfg.rounds, ccfg.local_epochs)
+
+        # the fleet CPSL is built at the PADDED shape: every grid variant
+        # differs only in data (tables/masks/weights/lr), so one instance
+        # — and therefore one compiled executable — serves the whole grid
+        M_pad, K_pad = self.plan.idx.shape[2], self.plan.idx.shape[4]
+        self.ccfg = dataclasses.replace(ccfg, n_clusters=M_pad,
+                                        cluster_size=K_pad)
+        self.cpsl = CPSL(make_split_model(model, self.ccfg.cut_layer,
+                                          conv_impl=self.ccfg.conv_impl),
+                         self.ccfg)
+        self.dsd = DeviceResidentDataset(
+            xtr, ytr, shards[self.specs[0]["seed"]], B,
+            eval_images=xte, eval_labels=yte)
+        self.lr_scale = (np.array([sp["lr_scale"] for sp in self.specs],
+                                  np.float32)
+                         if fcfg.lr_scales else None)
+
+    def _price_latency(self, spec) -> List[float]:
+        """Cumulative per-round wireless latency for one replica — the
+        shared equal-spectrum loop (``core.latency.equal_split_curve``),
+        priced at the replica's actual cut layer (the fig benchmarks
+        keep their legacy v=1 convention on the same loop)."""
+        if self.prof is None or self.ncfg is None:
+            return []
+        return lt.equal_split_curve(
+            self.base_ccfg.cut_layer, spec["layout"], self.ncfg,
+            self.prof, self.base_ccfg.batch_per_device,
+            self.base_ccfg.local_epochs, self.fcfg.rounds, spec["seed"])
+
+    def run(self) -> dict:
+        """Dispatch the fleet (one batched program) and extract
+        per-replica curves. Returns ``{"replicas": [...], "wall_s",
+        "n_replicas", "eval_rounds"}``; each replica dict carries its
+        grid coordinates plus ``loss`` (R,), ``acc``/``eval_loss`` at
+        the eval rounds, and cumulative ``sim_time_s``."""
+        fcfg = self.fcfg
+        t0 = time.monotonic()
+        states = self.cpsl.init_fleet_state(self.plan.seeds)
+        eval_data = self.dsd.eval_data if fcfg.eval_every else None
+        states, metrics = self.cpsl.run_fleet(
+            states, self.dsd.data, self.plan.idx, self.plan.weights,
+            lr_scale=self.lr_scale, eval_data=eval_data,
+            eval_every=fcfg.eval_every,
+            cluster_mask=self.plan.cluster_mask,
+            client_mask=self.plan.client_mask)
+        jax.block_until_ready(metrics["loss"])
+        wall = time.monotonic() - t0
+
+        loss = np.asarray(metrics["loss"])
+        evals = metrics.get("eval")
+        replicas = []
+        for e, spec in enumerate(self.specs):
+            rep = {k: spec[k] for k in ("seed", "cluster_size",
+                                        "n_clusters", "lr_scale")}
+            rep["loss"] = [float(x) for x in loss[e]]
+            if evals is not None:
+                rep["acc"] = [float(x) for x in np.asarray(evals["acc"][e])]
+                rep["eval_loss"] = [float(x)
+                                    for x in np.asarray(evals["loss"][e])]
+            lat = self._price_latency(spec)
+            if lat:
+                rep["sim_time_s"] = lat
+            replicas.append(rep)
+        out = {"replicas": replicas, "wall_s": wall,
+               "n_replicas": len(replicas)}
+        if evals is not None:
+            out["eval_rounds"] = metrics["eval_rounds"]
+        self.states = states
+        return out
