@@ -1,14 +1,59 @@
 """Paper Fig. 8: (a) Gibbs-sampling convergence for smooth factors delta;
 (b) per-round latency of the proposed joint clustering+spectrum algorithm
-vs heuristic (similar-compute) and random clustering, across bandwidths."""
+vs heuristic (similar-compute) and random clustering, across bandwidths.
+
+Part (b) is rewired onto ``repro.sim.fleet``: per bandwidth, the
+heuristic arm (sort-by-compute layout, equal split) and the random arm
+(random-permutation layout, equal split) are priced as episode fleets in
+one dispatch each, on the SAME realized network draws (shared seeds /
+innovation streams); the proposed arm then runs host Gibbs (Alg. 4) on
+exactly those draws, extracted from the fleet trace — so the three arms
+are common-random-number coupled draw by draw. (Gibbs inside the jit is
+a ROADMAP open item; the host planner remains the reference.)"""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import bench_common as bc
+from repro.configs.base import SimFleetCfg
 from repro.core import profile as pf
 from repro.core import resource as rs
-from repro.core.channel import NetworkCfg, device_means, sample_network
+from repro.core.channel import NetworkCfg, NetworkState, device_means, \
+    sample_network
+from repro.sim.dynamics import DynamicsCfg
+from repro.sim.fleet import LAYOUT_COMPUTE, SimFleetRunner
+
+
+def _baseline_fleets(ncfg_b, prof, n_draws, iters):
+    """Heuristic + random equal-split arms for one bandwidth as ONE
+    fleet (episodes 0..n-1 heuristic, n..2n-1 random; the duplicated
+    seed axis gives both arms the same per-draw network realizations);
+    the proposed arm reuses the realized draws from the trace."""
+    fcfg = SimFleetCfg(rounds=1, seeds=tuple(range(n_draws)) * 2,
+                       policies=("equal",), cluster_sizes=(5,), cuts=(1,),
+                       batch_per_device=16, local_epochs=1, mean_seed=0)
+    dcfg = DynamicsCfg(rho_snr=0.0, rho_f=0.0, seed=1)
+    rng = np.random.default_rng(0)
+    runner = SimFleetRunner(
+        prof, ncfg_b, dcfg, fcfg,
+        layout_modes=[LAYOUT_COMPUTE] * n_draws + [0] * n_draws,
+        perms={s: rng.permutation(ncfg_b.n_devices)
+               for s in range(n_draws)})
+    res = runner.run()
+
+    lat_g = lat_h = lat_r = 0.0
+    for d in range(n_draws):
+        # identical draws by construction (same-seed episodes)
+        np.testing.assert_array_equal(res["trace"]["f"][d, 0],
+                                      res["trace"]["f"][n_draws + d, 0])
+        net_d = NetworkState(f=res["trace"]["f"][d, 0],
+                             rate=res["trace"]["rate"][d, 0])
+        _, _, lg = rs.gibbs_clustering(1, net_d, ncfg_b, prof, 16, 1,
+                                       6, 5, iters=iters, seed=0)
+        lat_g += lg / n_draws
+        lat_h += res["episodes"][d]["latency_s"][0] / n_draws
+        lat_r += res["episodes"][n_draws + d]["latency_s"][0] / n_draws
+    return lat_g, lat_h, lat_r
 
 
 def run(quick: bool = True) -> dict:
@@ -30,20 +75,9 @@ def run(quick: bool = True) -> dict:
     for bw in ((10, 30, 60) if not quick else (10, 30)):
         ncfg_b = NetworkCfg(n_devices=30, homogeneous=False,
                             n_subcarriers=bw)
-        lat_g = lat_h = lat_r = 0.0
         n_draws = 3 if quick else 10
-        rng = np.random.default_rng(1)
-        for _ in range(n_draws):
-            net_b = sample_network(ncfg_b, *device_means(ncfg_b, 0), rng)
-            _, _, lg = rs.gibbs_clustering(1, net_b, ncfg_b, prof, 16, 1,
-                                           6, 5, iters=iters, seed=0)
-            _, _, lh = rs.heuristic_clustering(1, net_b, ncfg_b, prof, 16,
-                                               1, 6, 5)
-            _, _, lr = rs.random_clustering(1, net_b, ncfg_b, prof, 16, 1,
-                                            6, 5, seed=0)
-            lat_g += lg / n_draws
-            lat_h += lh / n_draws
-            lat_r += lr / n_draws
+        lat_g, lat_h, lat_r = _baseline_fleets(ncfg_b, prof, n_draws,
+                                               iters)
         compare[f"bw_{bw}MHz"] = {
             "proposed": lat_g, "heuristic": lat_h, "random": lat_r,
             "gain_vs_heuristic": 1 - lat_g / lat_h,

@@ -11,9 +11,9 @@ import time
 import traceback
 
 from benchmarks import (bench_dynamics, bench_fleet, bench_planner,
-                        bench_round, fig5_training, fig6_cluster_size,
-                        fig7_cut_layer, fig8_resource, roofline,
-                        table2_latency)
+                        bench_round, bench_simfleet, fig5_training,
+                        fig6_cluster_size, fig7_cut_layer, fig8_resource,
+                        roofline, table2_latency)
 
 BENCHES = {
     "table2_latency": table2_latency.main,
@@ -26,6 +26,7 @@ BENCHES = {
     "bench_planner": bench_planner.main,
     "bench_round": bench_round.main,
     "bench_fleet": bench_fleet.main,
+    "bench_simfleet": bench_simfleet.main,
 }
 
 

@@ -1,5 +1,11 @@
 """Paper §VIII-B per-round latency numbers (Table II constants):
-CPSL 3.78 s, vanilla SL 13.90 s, FL 33.43 s."""
+CPSL 3.78 s, vanilla SL 13.90 s, FL 33.43 s.
+
+The CPSL pricing runs through the jnp cost engine
+(``repro.sim.fleet.PartitionBatchJ`` — the float64 port of eqs. 15-25
+behind the episode fleets) and is cross-checked against the NumPy
+``round_latency`` oracle; SL and FL keep their host comparator
+formulas."""
 from __future__ import annotations
 
 import numpy as np
@@ -8,6 +14,22 @@ from benchmarks import bench_common as bc
 from repro.core import latency as lt
 from repro.core import profile as pf
 from repro.core.channel import NetworkCfg, device_means, sample_network
+from repro.sim.fleet import PartitionBatchJ
+
+
+def _cpsl_latency(net, ncfg, prof) -> float:
+    """Six 5-device clusters, equal 6-subcarrier split, cut v=1 — priced
+    by the jnp evaluator, oracle-checked against the NumPy path."""
+    sizes = [5] * 6
+    dev = np.arange(30)
+    xs = np.full((1, 30), 6)
+    pbj = PartitionBatchJ(1, net, ncfg, prof, 16, 1, sizes, dev)
+    got = float(pbj.latencies(xs)[0])
+    clusters = [list(range(m * 5, (m + 1) * 5)) for m in range(6)]
+    want = lt.round_latency(1, clusters, [np.full(5, 6)] * 6, net, ncfg,
+                            prof, 16, 1)
+    assert abs(got - want) <= 1e-9 * want, (got, want)
+    return got
 
 
 def run(quick: bool = True) -> dict:
@@ -15,16 +37,14 @@ def run(quick: bool = True) -> dict:
     net = sample_network(ncfg, *device_means(ncfg, 0),
                          np.random.default_rng(0))
     prof = pf.paper_constants_profile()
-    clusters = [list(range(m * 5, (m + 1) * 5)) for m in range(6)]
-    xs = [np.full(5, 6)] * 6
-    cpsl = lt.round_latency(1, clusters, xs, net, ncfg, prof, 16, 1)
+    cpsl = _cpsl_latency(net, ncfg, prof)
     sl = lt.vanilla_sl_round_latency(1, net, ncfg, prof, 16)
     fl = lt.fl_round_latency(net, ncfg, prof, 16)
     # variant matching the paper's number: model distribution/upload only
     # once per round amortized out (their 3.78 s excludes MD+DMT)
     prof0 = pf.paper_constants_profile()
     prof0.xi_d = prof0.xi_d * 0.0
-    cpsl_nomodel = lt.round_latency(1, clusters, xs, net, ncfg, prof0, 16, 1)
+    cpsl_nomodel = _cpsl_latency(net, ncfg, prof0)
     out = {
         "cpsl_s": cpsl, "sl_s": sl, "fl_s": fl,
         "cpsl_excl_model_transfer_s": cpsl_nomodel,

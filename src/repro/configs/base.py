@@ -255,3 +255,34 @@ class SimCfg:
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class SimFleetCfg:
+    """Episode fleet: E = cuts x policies x cluster_sizes x seeds dynamic-
+    network episodes priced as ONE jitted/vmapped program
+    (``repro.sim.fleet.SimFleetRunner``).
+
+    Episodes differ only in data — per-episode profile constants (cut),
+    policy/cluster-size selectors, device means and innovation streams
+    (seed) — so the whole grid shares one XLA compile. Episodes with the
+    same ``seed`` share their network realization (means + fading/compute
+    innovations), which gives common-random-number coupling across the
+    other grid axes (the fig. 7 cut sweep relies on it)."""
+    rounds: int = 20                        # slots T per episode
+    seeds: Tuple[int, ...] = (0,)
+    policies: Tuple[str, ...] = ("greedy",)  # spectrum policy: equal | greedy
+    cluster_sizes: Tuple[int, ...] = (5,)   # target K per episode
+    cuts: Tuple[int, ...] = (3,)            # cut layer v per episode
+    batch_per_device: int = 16              # B in the eq. 15-25 cost model
+    local_epochs: int = 1                   # L
+    mean_seed: Optional[int] = None         # shared device_means seed;
+                                            # None = per-episode seed
+
+    @property
+    def n_episodes(self) -> int:
+        return (len(self.cuts) * len(self.policies)
+                * len(self.cluster_sizes) * len(self.seeds))
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)

@@ -202,6 +202,21 @@ def cluster_latency_batch(v: int, devices: Sequence[int], xs: np.ndarray,
         physical_gradients=physical_gradients).latencies(xs)
 
 
+def equal_split_x(K: int, C: int) -> np.ndarray:
+    """Feasible equal spectrum split for one K-device cluster: C // K
+    subcarriers each, with the C mod K remainder handed one-by-one to the
+    first devices — always sums to exactly C. Shared by
+    ``equal_split_curve``, the benchmark baselines
+    (``core.resource._uniform_xs``), and the jnp episode-fleet engine
+    (``repro.sim.fleet``), which keeps the three in lockstep."""
+    if K > C:
+        raise ValueError(
+            f"cluster of {K} devices exceeds the {C}-subcarrier budget "
+            "(need at least one subcarrier per device)")
+    base, rem = divmod(C, K)
+    return np.full(K, base, dtype=np.int64) + (np.arange(K) < rem)
+
+
 def round_latency(v: int, clusters: Sequence[Sequence[int]],
                   xs: Sequence[np.ndarray], net: NetworkState,
                   ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
@@ -226,8 +241,10 @@ def equal_split_curve(v: int, clusters: Sequence[Sequence[int]],
 
     mu_f, mu_snr = device_means(ncfg, seed)
     rng = np.random.default_rng(seed)
-    K = len(clusters[0])
-    xs = [np.full(K, max(ncfg.n_subcarriers // K, 1))] * len(clusters)
+    # each cluster is priced at its OWN size: churn-balanced layouts are
+    # routinely unequal (balanced_sizes emits e.g. [4, 3, 3]), and sizing
+    # every cluster like the first one mis-prices (or crashes) them
+    xs = [equal_split_x(len(c), ncfg.n_subcarriers) for c in clusters]
     t, out = 0.0, []
     for _ in range(rounds):
         net = sample_network(ncfg, mu_f, mu_snr, rng)

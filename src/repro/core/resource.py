@@ -156,9 +156,13 @@ def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
 
 def _uniform_xs(clusters, ncfg):
     """Benchmark schemes don't optimize spectrum: equal split (paper's
-    baselines lack the joint spectrum allocation)."""
-    return [np.full(len(c), max(ncfg.n_subcarriers // len(c), 1))
-            for c in clusters]
+    baselines lack the joint spectrum allocation). Uses the shared
+    ``equal_split_x`` helper so every cluster's allocation sums to exactly
+    its C-subcarrier budget — the old ``max(C//K, 1)`` per device exceeded
+    the budget whenever K > C and silently wasted the C mod K remainder
+    otherwise, handing the baselines infeasible (or pessimised) spectrum."""
+    from repro.core.latency import equal_split_x
+    return [equal_split_x(len(c), ncfg.n_subcarriers) for c in clusters]
 
 
 def heuristic_clustering(v, net, ncfg, prof, B, L, n_clusters, cluster_size,

@@ -13,6 +13,12 @@ Layers on top of ``repro.core``:
                  stale-decision fallback for mid-round departures.
   engine.py      round executor coupling controller + latency model + the
                  real ``core.cpsl`` trainer; emits JSONL traces.
+  fleet.py       episode fleets: E dynamic-network episodes as ONE
+                 jitted/vmapped float64 program — jnp ports of the AR(1)
+                 dynamics and the eq. (15)-(25) cost model
+                 (``PartitionBatchJ``), fixed-shape equal/greedy spectrum
+                 policies, and ``SimFleetRunner`` pricing a seeds x
+                 policy x cluster-size x cut grid in one dispatch.
 """
 from repro.sim.batched import (BatchedClusterEvaluator, MultiChainResult,
                                PartitionBatch, gibbs_clustering_batched,
@@ -22,6 +28,8 @@ from repro.sim.batched import (BatchedClusterEvaluator, MultiChainResult,
 from repro.sim.controller import Plan, TwoTimescaleController
 from repro.sim.dynamics import DynamicsCfg, Event, NetworkProcess
 from repro.sim.engine import SimEngine
+from repro.sim.fleet import (PartitionBatchJ, SimFleetRunner,
+                             fleet_trace_records, recompute_fleet_latencies)
 
 __all__ = [
     "BatchedClusterEvaluator", "PartitionBatch", "MultiChainResult",
@@ -29,4 +37,6 @@ __all__ = [
     "gibbs_clustering_multichain", "saa_cut_selection_batched",
     "Plan", "TwoTimescaleController",
     "DynamicsCfg", "Event", "NetworkProcess", "SimEngine",
+    "PartitionBatchJ", "SimFleetRunner", "fleet_trace_records",
+    "recompute_fleet_latencies",
 ]

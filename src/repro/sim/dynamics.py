@@ -52,9 +52,17 @@ class Event:
     slot: int
     kind: str                        # depart | arrive | energy_depleted
     device: int                      # global device id
+    # why a "depart" happened, when it wasn't plain churn — e.g. a
+    # floor-pinned, already-depleted device finally leaving emits
+    # kind="depart" with cause="energy_depleted" so trace consumers can
+    # attribute the churn to energy (counting kinds alone undercounts it)
+    cause: Optional[str] = None
 
     def to_dict(self) -> dict:
-        return {"slot": self.slot, "kind": self.kind, "device": self.device}
+        d = {"slot": self.slot, "kind": self.kind, "device": self.device}
+        if self.cause is not None:
+            d["cause"] = self.cause
+        return d
 
 
 class NetworkProcess:
@@ -124,10 +132,11 @@ class NetworkProcess:
             + np.sqrt(1.0 - d.rho_f ** 2) * c.f_sigma * eps_f, 1e7)
         self.slot += 1
 
-    def _depart(self, gid: int, kind: str,
-                slot: Optional[int] = None) -> Event:
+    def _depart(self, gid: int, kind: str, slot: Optional[int] = None,
+                cause: Optional[str] = None) -> Event:
         self.active[gid] = False
-        return Event(self.slot if slot is None else slot, kind, int(gid))
+        return Event(self.slot if slot is None else slot, kind, int(gid),
+                     cause)
 
     def sample_departures(self, slot: Optional[int] = None) -> List[Event]:
         """Forced + Bernoulli departures for ``slot`` (default: the
@@ -180,7 +189,10 @@ class NetworkProcess:
         The ``min_devices`` floor takes precedence over depletion: a
         floor-pinned device stays active with its battery clamped at 0,
         and the one ``energy_depleted`` event is still emitted at the slot
-        the battery actually ran out."""
+        the battery actually ran out. When such a pinned device finally
+        leaves (arrivals lifted the floor), the departure event carries
+        ``cause="energy_depleted"`` so energy-driven churn stays countable
+        even though the depletion itself was recorded slots earlier."""
         if self.dcfg.energy_budget_j <= 0:
             return []
         events: List[Event] = []
@@ -191,7 +203,8 @@ class NetworkProcess:
                 # pinned at the floor earlier; leave as soon as arrivals
                 # lift the population above min_devices again
                 if self.n_active > self.dcfg.min_devices:
-                    events.append(self._depart(gid, "depart"))
+                    events.append(self._depart(gid, "depart",
+                                               cause="energy_depleted"))
                 continue
             self.energy[gid] -= float(j)
             if self.energy[gid] <= 0:

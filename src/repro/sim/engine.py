@@ -268,8 +268,13 @@ def recompute_trace_latencies(trace, prof: CutProfile, ncfg: NetworkCfg,
     """Re-derive each traced round's latency from the recorded network
     snapshot with ``core.latency.round_latency`` — the acceptance check
     that the engine's accounting matches the cost model. Accepts either
-    in-memory trace records or parsed JSONL lines."""
+    in-memory trace records, parsed JSONL lines, or a whole
+    ``repro.sim.fleet.SimFleetRunner.run`` result (returns (E, T) then,
+    with empty rounds recomputing to 0 — the episode-fleet oracle)."""
     from repro.core.channel import NetworkState
+    if isinstance(trace, dict):          # episode-fleet result
+        from repro.sim.fleet import recompute_fleet_latencies
+        return recompute_fleet_latencies(trace, prof, ncfg, B, L)
     out = []
     for rec in trace:
         if rec.get("skipped"):

@@ -1,0 +1,762 @@
+"""Episode fleets: E dynamic-network episodes as ONE jitted program.
+
+PR 4 batched the *training* side (``CPSL.run_fleet``); this module is the
+mirror for the paper's latency results (§VIII, figs. 7-8): Monte-Carlo
+evaluation of wireless round latency under network dynamics across
+seeds / policies / cluster sizes / cut layers runs as a single
+``lax.scan`` over slots with everything vmapped/broadcast over the
+episode axis, instead of one host NumPy loop per episode.
+
+Three layers, all float64 (the cost model's contract dtype):
+
+  * a jnp port of ``sim.dynamics.NetworkProcess.evolve`` — Gauss-Markov
+    AR(1) fading + compute drift with the exact stationary-law-preserving
+    innovation scaling, over a FIXED population with an active-mask for
+    deterministic churn (per-device depart/arrive slots) and energy
+    depletion (battery drain per executed round);
+  * a jnp port of the eq. (15)-(25) cost model — ``_cluster_latency_j``
+    keeps the operand order of ``core.latency.cluster_latency`` /
+    ``PartitionBatch`` term by term, and :class:`PartitionBatchJ` wraps
+    it in the NumPy ``PartitionBatch`` API so the two cross-check on the
+    same inputs to tight float64 tolerance (tests pin this);
+  * fixed-shape per-slot control — balanced clustering over the active
+    devices (sorted by a static permutation rank, or by current compute
+    for the fig. 8 "similar-compute" heuristic) padded to (M, K) slot
+    masks as in ``data.pipeline.fleet_plan``, with equal-split
+    (``core.latency.equal_split_x`` semantics) and greedy Alg. 3
+    (lockstep ``lax.fori_loop``, same candidate argmin as
+    ``core.resource.greedy_spectrum``) spectrum policies selected
+    per episode as data.
+
+:class:`SimFleetRunner` prices the whole ``SimFleetCfg`` grid in one
+dispatch, mirrors every decision in a looped NumPy reference
+(``run_reference`` — identical innovations, host ``round_latency``
+pricing), and can couple a static-scenario grid to ``CPSL.run_fleet``
+for joint latency x accuracy curves (``train_curves``).
+
+Equivalence contract (tests/test_simfleet.py, benchmarks/bench_simfleet):
+on a frozen scenario (any rho, forced churn/energy schedules, no Gibbs)
+episode e's per-round latency trace matches the looped NumPy reference
+— and the ``recompute_trace_latencies`` oracle re-derivation from the
+traced (f, rate, clusters, xs, v) — to tight float64 tolerance, with
+identical greedy/equal allocations.
+
+Not ported (host ``SimEngine`` remains the reference for these; see
+ROADMAP open items): Gibbs/SAA planning inside the jit, stochastic
+(Bernoulli) churn, the ``min_devices`` floor, and mid-round plan repair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.configs.base import SimFleetCfg
+from repro.core import latency as lt
+from repro.core.channel import NetworkCfg, NetworkState, device_means
+from repro.core.latency import CutProfile, equal_split_x
+from repro.sim.controller import balanced_sizes
+from repro.sim.dynamics import DynamicsCfg
+
+__all__ = ["PartitionBatchJ", "SimFleetRunner", "fleet_trace_records",
+           "recompute_fleet_latencies"]
+
+_CST_KEYS = ("xi_d", "xi_s", "xi_g", "gamma_dF", "gamma_dB",
+             "gamma_sF", "gamma_sB")
+_F_FLOOR = 1e7                      # compute floor, as NetworkProcess
+POLICY_EQUAL, POLICY_GREEDY = 0, 1
+LAYOUT_RANK, LAYOUT_COMPUTE = 0, 1
+
+
+# --------------------------------------------------------------------------
+# jnp cost model — eqs. (15)-(25), operand order of cluster_latency
+# --------------------------------------------------------------------------
+
+def _cluster_latency_j(cst: Dict[str, jnp.ndarray], fd, rd, xs, mask,
+                       csize, *, B: int, L: int, C: int,
+                       f_server_kappa: float, kappa: float,
+                       physical_gradients: bool = False):
+    """Masked jnp port of ``core.latency.cluster_latency`` over (..., K)
+    cluster rows.
+
+    ``cst``: per-cut profile constants, each a leading-axes shape ending
+    in singleton(s) so it broadcasts against the (..., K) per-device
+    terms; ``fd``/``rd``: gathered device compute / subcarrier rate;
+    ``xs``: subcarrier allocation (padded slots must be >= 1); ``mask``:
+    real device slots; ``csize``: real cluster size at the REDUCED rank
+    (broadcastable against the (...,) per-cluster output; 0 = padded
+    cluster -> latency 0). Every expression keeps the operand order of
+    the scalar NumPy path, so values agree to float64 tolerance (only
+    XLA-vs-NumPy ulp effects remain; association is identical)."""
+
+    def red(a):
+        # constants at the post-max rank (drop the singleton K axis)
+        return a[..., 0] if getattr(a, "ndim", 0) else a
+
+    f = fd * kappa
+    xi_g = cst["xi_g"] * (B if physical_gradients else 1.0)
+    tau_b = cst["xi_d"] / (C * rd)                   # (15)
+    tau_d = B * cst["gamma_dF"] / f                  # (16)
+    tau_s = B * cst["xi_s"] / (xs * rd)              # (17)
+    tau_e = csize * B * (red(cst["gamma_sF"]) + red(cst["gamma_sB"])) \
+        / f_server_kappa                             # (18)
+    tau_g = xi_g / (xs * rd)                         # (20)
+    tau_u = B * cst["gamma_dB"] / f                  # (21)
+    tau_t = cst["xi_d"] / (xs * rd)                  # (23)
+
+    def mx(v):
+        return jnp.max(jnp.where(mask, v, -jnp.inf), axis=-1)
+
+    d_S = mx(tau_b + tau_d + tau_s) + tau_e          # (19)
+    d_I = mx(tau_g + tau_u + tau_d + tau_s) + tau_e  # (22)
+    d_E = mx(tau_g + tau_u + tau_t)                  # (24)
+    D = d_S + (L - 1) * d_I + d_E
+    return jnp.where(csize > 0, D, 0.0)
+
+
+def _sum_left_to_right(per_cluster):
+    """(..., M) -> (...,) accumulated m = 0, 1, ... exactly like the
+    Python ``sum`` in ``round_latency`` (padded clusters add exact 0.0,
+    a bitwise no-op)."""
+    total = per_cluster[..., 0]
+    for m in range(1, per_cluster.shape[-1]):
+        total = total + per_cluster[..., m]
+    return total
+
+
+class PartitionBatchJ:
+    """jnp float64 port of ``core.latency.PartitionBatch``: scores R full
+    M-cluster partitions — optionally per-replica cuts and stacked
+    network draws — through :func:`_cluster_latency_j`.
+
+    Same constructor and ``cluster_latencies`` / ``latencies`` contract
+    as the NumPy class (cluster-by-cluster ``sizes`` layout, (R, N)
+    allocations, row broadcasting); values agree with it to tight
+    float64 tolerance on identical inputs (tests/test_simfleet.py pins
+    randomized (v, sizes, draws) grids). The episode-fleet simulator and
+    the rewired fig. 7/8 + table 2 benchmarks share this one cost
+    implementation."""
+
+    def __init__(self, v, net: NetworkState, ncfg: NetworkCfg,
+                 prof: CutProfile, B: int, L: int, sizes: Sequence[int],
+                 device_idx: np.ndarray, net_rows=None,
+                 physical_gradients: bool = False):
+        sizes = np.asarray(sizes, dtype=np.int64)
+        dev = np.asarray(device_idx, dtype=np.int64)
+        if dev.ndim == 1:
+            dev = dev[None, :]
+        assert dev.shape[1] == int(sizes.sum()), \
+            "device_idx must be laid out cluster-by-cluster per `sizes`"
+        self.M, self.Kmax = len(sizes), int(sizes.max())
+        self.N = int(sizes.sum())
+        self.sizes = sizes
+        self.starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        self.B, self.L = B, L
+        self.C = ncfg.n_subcarriers
+        self.kappa = float(ncfg.kappa)
+        self.f_server_kappa = ncfg.f_server * ncfg.kappa
+        self.physical = physical_gradients
+
+        v_arr = np.asarray(v)
+        cst = {k: np.asarray(getattr(prof, k), dtype=np.float64)[v_arr - 1]
+               for k in _CST_KEYS}
+        f_all = np.asarray(net.f, dtype=np.float64)
+        r_all = np.asarray(net.rate, dtype=np.float64)
+        if f_all.ndim == 1:
+            fd, rd = f_all[dev], r_all[dev]
+        else:
+            rows = np.asarray(net_rows, dtype=np.int64)[:, None]
+            fd, rd = f_all[rows, dev], r_all[rows, dev]
+
+        with enable_x64():
+            # (R?, M, Kmax) padded views + static slot masks
+            self._mask = jnp.asarray(self._to_slots(
+                np.ones((1, self.N)), fill=0.0) > 0.5)[0]
+            self._csize = jnp.asarray(sizes)
+            self._fd = jnp.asarray(self._to_slots(fd, fill=1.0))
+            self._rd = jnp.asarray(self._to_slots(rd, fill=1.0))
+            self._cst = {k: jnp.asarray(a)[..., None, None] if a.ndim
+                         else jnp.asarray(a) for k, a in cst.items()}
+
+    def _to_slots(self, arr: np.ndarray, fill: float) -> np.ndarray:
+        """(R, N) cluster-by-cluster layout -> (R, M, Kmax) padded."""
+        arr = np.asarray(arr, dtype=np.float64)
+        if arr.ndim == 1:
+            arr = arr[None, :]
+        out = np.full((arr.shape[0], self.M, self.Kmax), fill)
+        for m, (s, k) in enumerate(zip(self.starts, self.sizes)):
+            out[:, m, :k] = arr[:, s:s + k]
+        return out
+
+    def cluster_latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(R, N) allocations -> (R, M) per-cluster latencies D_m."""
+        with enable_x64():
+            x = jnp.asarray(self._to_slots(np.asarray(xs, np.float64),
+                                           fill=1.0))
+            D = _cluster_latency_j(
+                self._cst, self._fd, self._rd, x, self._mask, self._csize,
+                B=self.B, L=self.L, C=self.C,
+                f_server_kappa=self.f_server_kappa, kappa=self.kappa,
+                physical_gradients=self.physical)
+        return np.asarray(D)
+
+    def latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(R, N) allocations -> (R,) round totals (left-to-right cluster
+        accumulation, as ``PartitionBatch.latencies``)."""
+        per = self.cluster_latencies(xs)
+        total = per[:, 0].copy()
+        for m in range(1, self.M):
+            total = total + per[:, m]
+        return total
+
+
+# --------------------------------------------------------------------------
+# in-jit per-slot control: balanced layout + spectrum policies
+# --------------------------------------------------------------------------
+
+def _layout_one(order, n_active, Ktgt, *, M: int, K: int):
+    """Balanced clustering of the first ``n_active`` entries of ``order``
+    into clusters of target size ``Ktgt`` — the jnp mirror of
+    ``controller.balanced_sizes`` + consecutive chunking. Returns
+    (dev (M, K), mask (M, K), csize (M,))."""
+    n = n_active
+    Mreal = jnp.where(n > 0, -(-n // Ktgt), 0)       # ceil(n / Ktgt)
+    Msafe = jnp.maximum(Mreal, 1)
+    base = n // Msafe
+    extra = n - base * Msafe
+    m_idx = jnp.arange(M)
+    csize = jnp.where(m_idx < Mreal, base + (m_idx < extra), 0)
+    starts = jnp.concatenate([jnp.zeros(1, csize.dtype),
+                              jnp.cumsum(csize)[:-1]])
+    k_idx = jnp.arange(K)
+    pos = starts[:, None] + k_idx[None, :]
+    mask = k_idx[None, :] < csize[:, None]
+    dev = jnp.take(order, jnp.clip(pos, 0, order.shape[0] - 1))
+    return jnp.where(mask, dev, 0), mask, csize
+
+
+def _equal_xs(csize, mask, C: int):
+    """Per-cluster equal split with remainder distribution — the jnp
+    mirror of ``core.latency.equal_split_x`` (padded slots get 1 to keep
+    divisions finite; they are masked out of every latency term)."""
+    safe = jnp.maximum(csize, 1)
+    base = C // safe
+    rem = C - base * safe
+    k_idx = jnp.arange(mask.shape[-1])
+    xs = base[..., None] + (k_idx < rem[..., None])
+    return jnp.where(mask, xs, 1)
+
+
+def _greedy_xs(cst_b, fd, rd, mask, csize, *, C: int, B: int, L: int,
+               f_server_kappa: float, kappa: float):
+    """Lockstep greedy Alg. 3 over every (episode, cluster) slot: start
+    at one subcarrier per device, then C - K_m gated steps each granting
+    one subcarrier to the argmin-latency candidate — candidate values
+    and first-min tie-breaks match ``core.resource.greedy_spectrum``
+    (per-cluster decisions are independent, so lockstep == sequential).
+
+    ``cst_b``: constants broadcastable against the (E, M, Kc, K)
+    candidate tensor. Returns (E, M, K) int allocations summing to C on
+    every real cluster."""
+    E, M, K = fd.shape
+    eye = jnp.eye(K, dtype=jnp.int32)
+    fd4, rd4 = fd[:, :, None, :], rd[:, :, None, :]
+    mask4 = mask[:, :, None, :]
+    csize4 = csize[:, :, None]
+
+    def body(i, X):
+        cand = X[:, :, None, :] + eye[None, None]            # (E,M,Kc,K)
+        D = _cluster_latency_j(cst_b, fd4, rd4, cand, mask4, csize4,
+                               B=B, L=L, C=C,
+                               f_server_kappa=f_server_kappa, kappa=kappa)
+        D = jnp.where(mask, D, jnp.inf)      # only real slots are cands
+        best = jnp.argmin(D, axis=-1)                        # (E, M)
+        inc = jax.nn.one_hot(best, K, dtype=X.dtype)
+        allowed = (i < C - csize) & (csize > 0)
+        return X + inc * allowed[..., None]
+
+    X0 = jnp.ones((E, M, K), dtype=jnp.int32)
+    return jax.lax.fori_loop(0, C - 1, body, X0)
+
+
+# --------------------------------------------------------------------------
+# the episode fleet program
+# --------------------------------------------------------------------------
+
+def _simulate(mu_f, mu_snr, eta_f0, eta_s0, eps_f, eps_s, cst, Ktgt,
+              layout_mode, perm_rank, depart, arrive, energy0, *,
+              B: int, L: int, C: int, M: int, K: int, T: int, bw: float,
+              kappa: float, f_server_kappa: float, f_sigma: float,
+              snr_sigma: float, rho_f: float, rho_snr: float,
+              coef_f: float, coef_s: float, p_compute: float,
+              p_tx: float, track_energy: bool, use_greedy: bool,
+              use_equal: bool, greedy_rows: tuple):
+    """The whole E-episode, T-slot simulation as one scan. Shapes:
+    means/innovations (E, N) / (T, E, N); grid selectors (E,); returns a
+    dict of slot-major stacked traces. ``greedy_rows`` (host-static) are
+    the episode indices on the greedy policy — in mixed grids the
+    (C - K)-step greedy loop runs only on those rows."""
+    E, N = mu_f.shape
+    e_idx = jnp.arange(E)[:, None, None]
+    cst3 = {k: v[:, None, None] for k, v in cst.items()}     # (E, 1, 1)
+    gi = jnp.asarray(greedy_rows, dtype=jnp.int32)
+    cst4g = {k: v[gi][:, None, None, None] for k, v in cst.items()}
+    by_compute = (layout_mode == LAYOUT_COMPUTE)[:, None]
+    lay = jax.vmap(functools.partial(_layout_one, M=M, K=K))
+
+    f0 = jnp.maximum(mu_f + f_sigma * eta_f0, _F_FLOOR)
+    snr0 = mu_snr + snr_sigma * eta_s0
+
+    def step(carry, inp):
+        f, snr, energy, depleted = carry
+        t, eps_f_t, eps_s_t = inp
+        active = (arrive <= t) & (t < depart) & ~depleted
+        n_active = jnp.sum(active, axis=1)
+        rate = bw * jnp.log2(1.0 + 10.0 ** (snr / 10.0))
+
+        # balanced layout over active devices, sorted by permutation
+        # rank (static) or by current compute (fig. 8 heuristic)
+        sortval = jnp.where(by_compute, f, perm_rank)
+        order = jnp.argsort(jnp.where(active, sortval, jnp.inf), axis=1)
+        dev, mask, csize = lay(order, n_active, Ktgt)
+        fd = f[e_idx, dev]
+        rd = rate[e_idx, dev]
+
+        xs_eq = _equal_xs(csize, mask, C) if use_equal else None
+        if use_greedy:
+            # per-episode decisions are independent, so running greedy
+            # on the greedy-policy rows alone is exact
+            xs_gr = _greedy_xs(cst4g, fd[gi], rd[gi], mask[gi], csize[gi],
+                               B=B, L=L, C=C,
+                               f_server_kappa=f_server_kappa, kappa=kappa)
+            xs = xs_eq.at[gi].set(xs_gr) if use_equal else xs_gr
+        else:
+            xs = xs_eq
+
+        clat = _cluster_latency_j(cst3, fd, rd, xs, mask, csize, B=B,
+                                  L=L, C=C, f_server_kappa=f_server_kappa,
+                                  kappa=kappa)
+        latency = _sum_left_to_right(clat)
+
+        # energy drain of the executed round (device_round_energy port)
+        if track_energy:
+            fdk = fd * kappa
+            t_comp = L * B * (cst3["gamma_dF"] + cst3["gamma_dB"]) / fdk
+            t_tx = (L * B * cst3["xi_s"] + cst3["xi_d"]) / (xs * rd)
+            j_slot = p_compute * t_comp + p_tx * t_tx
+            j = jnp.zeros((E, N)).at[e_idx, dev].add(
+                jnp.where(mask, j_slot, 0.0))
+            e_un = energy - j
+            depleted_next = depleted | (active & (e_un <= 0.0))
+            energy_next = jnp.maximum(e_un, 0.0)
+        else:
+            energy_next, depleted_next = energy, depleted
+
+        # AR(1) evolution for the next slot (NetworkProcess.evolve port)
+        snr_next = mu_snr + rho_snr * (snr - mu_snr) + coef_s * eps_s_t
+        f_next = jnp.maximum(
+            mu_f + rho_f * (f - mu_f) + coef_f * eps_f_t, _F_FLOOR)
+
+        ys = {"f": f, "rate": rate, "active": active,
+              "n_active": n_active, "dev": dev, "mask": mask, "xs": xs,
+              "csize": csize, "cluster_latency": clat, "latency": latency,
+              "energy": energy_next}
+        return (f_next, snr_next, energy_next, depleted_next), ys
+
+    init = (f0, snr0, energy0, jnp.zeros((E, N), dtype=bool))
+    _, ys = jax.lax.scan(step, init,
+                         (jnp.arange(T), eps_f, eps_s))
+    return ys
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+class SimFleetRunner:
+    """Prices a ``SimFleetCfg`` grid of dynamic-network episodes in one
+    jitted dispatch (``run``), with a decision-identical looped NumPy
+    mirror (``run_reference`` / ``run_looped`` — the reference oracle
+    and the bench baseline) and optional coupling to ``CPSL.run_fleet``
+    (``train_curves``).
+
+    Dynamics come from ``DynamicsCfg``: rho_snr / rho_f, the energy
+    budget + power draws, and ``forced_departures`` (converted to the
+    per-device ``depart_slots`` schedule). Stochastic churn
+    (``p_depart``/``p_arrive``) is not representable as a fixed-shape
+    schedule and must be 0 here; the ``min_devices`` floor does not
+    apply (every scheduled departure/depletion executes).
+
+    ``perms`` sets per-episode cluster orderings (default: device-id
+    order): an (N,) / (E, N) array, or a ``{seed: permutation}`` dict —
+    the dict form assigns each episode its seed's permutation without
+    the caller having to know the runner's episode ordering (fig. 7
+    keeps its per-run random clusters CRN-coupled across cuts this
+    way); ``layout_modes`` (E,) selects rank (0, default) vs
+    sort-by-current-compute (1) clustering;
+    ``depart_slots`` / ``arrive_slots`` ((N,) or (E, N)) are explicit
+    churn schedules overriding / complementing ``forced_departures``."""
+
+    def __init__(self, prof: CutProfile, ncfg: NetworkCfg,
+                 dcfg: DynamicsCfg, fcfg: SimFleetCfg, *,
+                 perms=None,
+                 layout_modes: Optional[Sequence[int]] = None,
+                 depart_slots: Optional[np.ndarray] = None,
+                 arrive_slots: Optional[np.ndarray] = None):
+        assert dcfg.p_depart == 0 and dcfg.p_arrive == 0, \
+            "episode fleets support deterministic churn schedules only"
+        self.prof, self.ncfg, self.dcfg, self.fcfg = prof, ncfg, dcfg, fcfg
+        N, C, T = ncfg.n_devices, ncfg.n_subcarriers, fcfg.rounds
+        for k in fcfg.cluster_sizes:
+            assert 1 <= k <= C, f"cluster size {k} infeasible for C={C}"
+        for p in fcfg.policies:
+            assert p in ("equal", "greedy"), p
+        self.specs: List[dict] = [
+            {"cut": int(v), "policy": p, "cluster_size": int(k),
+             "seed": int(s)}
+            for v in fcfg.cuts for p in fcfg.policies
+            for k in fcfg.cluster_sizes for s in fcfg.seeds]
+        E = len(self.specs)
+        self.E, self.N, self.T = E, N, T
+        self.M = max(-(-N // k) for k in fcfg.cluster_sizes)
+        self.K = max(fcfg.cluster_sizes)
+
+        means = {}
+        for sp in self.specs:
+            ms = fcfg.mean_seed if fcfg.mean_seed is not None else sp["seed"]
+            if ms not in means:
+                means[ms] = device_means(ncfg, ms)
+        self._mu_f = np.stack([means[fcfg.mean_seed if fcfg.mean_seed
+                                     is not None else sp["seed"]][0]
+                               for sp in self.specs]).astype(np.float64)
+        self._mu_snr = np.stack([means[fcfg.mean_seed if fcfg.mean_seed
+                                       is not None else sp["seed"]][1]
+                                 for sp in self.specs]).astype(np.float64)
+
+        # per-episode innovation streams keyed by the episode SEED (same
+        # seed -> same realization: CRN coupling across cuts/policies)
+        with enable_x64():
+            master = jax.random.PRNGKey(dcfg.seed)
+            draws = {}
+            for sp in self.specs:
+                s = sp["seed"]
+                if s not in draws:
+                    draws[s] = np.asarray(jax.random.normal(
+                        jax.random.fold_in(master, s), (T + 1, 2, N),
+                        dtype=jnp.float64))
+        stk = np.stack([draws[sp["seed"]] for sp in self.specs])  # (E,T+1,2,N)
+        self._eta_f0, self._eta_s0 = stk[:, 0, 0], stk[:, 0, 1]
+        self._eps_f = np.ascontiguousarray(
+            stk[:, 1:, 0].transpose(1, 0, 2))                    # (T, E, N)
+        self._eps_s = np.ascontiguousarray(stk[:, 1:, 1].transpose(1, 0, 2))
+
+        self._cst = {k: np.asarray(getattr(prof, k), np.float64)
+                     [np.array([sp["cut"] for sp in self.specs]) - 1]
+                     for k in _CST_KEYS}
+        self._Ktgt = np.array([sp["cluster_size"] for sp in self.specs],
+                              np.int32)
+        self._policy = np.array(
+            [POLICY_GREEDY if sp["policy"] == "greedy" else POLICY_EQUAL
+             for sp in self.specs], np.int32)
+        self._mode = (np.zeros(E, np.int32) if layout_modes is None
+                      else np.asarray(layout_modes, np.int32))
+        assert self._mode.shape == (E,)
+
+        if perms is None:
+            perms = np.arange(N)
+        elif isinstance(perms, dict):
+            perms = np.stack([np.asarray(perms[sp["seed"]], np.int64)
+                              for sp in self.specs])
+        else:
+            perms = np.asarray(perms, np.int64)
+        perms = np.broadcast_to(perms, (E, N))
+        rank = np.empty((E, N), np.float64)
+        for e in range(E):
+            rank[e, perms[e]] = np.arange(N)
+        self._perm_rank = rank
+
+        def _sched(arr, default):
+            if arr is None:
+                arr = np.full(N, default, np.int64)
+            return np.broadcast_to(np.asarray(arr, np.int64), (E, N)).copy()
+
+        self._depart = _sched(depart_slots, T)
+        for slot, ids in dcfg.forced_departures.items():
+            for gid in ids:
+                if gid < N:
+                    self._depart[:, gid] = np.minimum(
+                        self._depart[:, gid], slot)
+        self._arrive = _sched(arrive_slots, 0)
+        self._energy0 = np.full((E, N), float(dcfg.energy_budget_j))
+
+        self._sim = jax.jit(functools.partial(
+            _simulate, B=fcfg.batch_per_device, L=fcfg.local_epochs, C=C,
+            M=self.M, K=self.K, T=T, bw=ncfg.subcarrier_bw,
+            kappa=float(ncfg.kappa),
+            f_server_kappa=ncfg.f_server * ncfg.kappa,
+            f_sigma=float(ncfg.f_sigma), snr_sigma=float(ncfg.snr_sigma_db),
+            rho_f=float(dcfg.rho_f), rho_snr=float(dcfg.rho_snr),
+            coef_f=np.sqrt(1.0 - dcfg.rho_f ** 2) * ncfg.f_sigma,
+            coef_s=np.sqrt(1.0 - dcfg.rho_snr ** 2) * ncfg.snr_sigma_db,
+            p_compute=float(dcfg.p_compute_w), p_tx=float(dcfg.p_tx_w),
+            track_energy=dcfg.energy_budget_j > 0,
+            use_greedy="greedy" in fcfg.policies,
+            use_equal="equal" in fcfg.policies,
+            greedy_rows=tuple(
+                np.flatnonzero(self._policy == POLICY_GREEDY).tolist())))
+
+    # -- batched dispatch -----------------------------------------------------
+
+    def run(self) -> dict:
+        """One jitted dispatch for the whole grid. Returns ``{"episodes":
+        [spec + latency_s/sim_time_s/n_active curves], "trace": {episode-
+        major arrays}, "wall_s"}``."""
+        with enable_x64():
+            t0 = time.monotonic()
+            ys = self._sim(jnp.asarray(self._mu_f),
+                           jnp.asarray(self._mu_snr),
+                           jnp.asarray(self._eta_f0),
+                           jnp.asarray(self._eta_s0),
+                           jnp.asarray(self._eps_f),
+                           jnp.asarray(self._eps_s),
+                           {k: jnp.asarray(v) for k, v in self._cst.items()},
+                           jnp.asarray(self._Ktgt),
+                           jnp.asarray(self._mode),
+                           jnp.asarray(self._perm_rank),
+                           jnp.asarray(self._depart),
+                           jnp.asarray(self._arrive),
+                           jnp.asarray(self._energy0))
+            jax.block_until_ready(ys["latency"])
+            wall = time.monotonic() - t0
+        trace = {k: np.asarray(v).swapaxes(0, 1) for k, v in ys.items()}
+        cum = np.cumsum(trace["latency"], axis=1)
+        episodes = []
+        for e, sp in enumerate(self.specs):
+            episodes.append(dict(
+                sp, latency_s=trace["latency"][e].tolist(),
+                sim_time_s=cum[e].tolist(),
+                n_active=trace["n_active"][e].tolist()))
+        return {"episodes": episodes, "trace": trace, "wall_s": wall}
+
+    # -- looped NumPy mirror (oracle + bench baseline) ------------------------
+
+    def run_reference(self, e: int) -> List[dict]:
+        """Episode ``e`` replayed as a host NumPy loop — identical
+        innovations and decision rules, host ``round_latency`` pricing
+        (the per-step greedy goes through the PR-1 vectorized Alg. 3,
+        itself bit-identical to the scalar loop). Returns SimEngine-style
+        per-round records."""
+        from repro.sim.batched import greedy_spectrum_batched
+
+        sp = self.specs[e]
+        ncfg, prof = self.ncfg, self.prof
+        B, L = self.fcfg.batch_per_device, self.fcfg.local_epochs
+        v, Ktgt = sp["cut"], sp["cluster_size"]
+        greedy = sp["policy"] == "greedy"
+        C, N, T = ncfg.n_subcarriers, self.N, self.T
+        mu_f, mu_snr = self._mu_f[e], self._mu_snr[e]
+        coef_f = np.sqrt(1.0 - self.dcfg.rho_f ** 2) * ncfg.f_sigma
+        coef_s = np.sqrt(1.0 - self.dcfg.rho_snr ** 2) * ncfg.snr_sigma_db
+        track = self.dcfg.energy_budget_j > 0
+        c = prof.at(v)
+
+        f = np.maximum(mu_f + ncfg.f_sigma * self._eta_f0[e], _F_FLOOR)
+        snr = mu_snr + ncfg.snr_sigma_db * self._eta_s0[e]
+        energy = self._energy0[e].copy()
+        depleted = np.zeros(N, dtype=bool)
+        recs, sim_time = [], 0.0
+        for t in range(T):
+            active = ((self._arrive[e] <= t) & (t < self._depart[e])
+                      & ~depleted)
+            rate = ncfg.subcarrier_bw * np.log2(1.0 + 10.0 ** (snr / 10.0))
+            net = NetworkState(f=f.copy(), rate=rate)
+            n = int(active.sum())
+            sortval = (f if self._mode[e] == LAYOUT_COMPUTE
+                       else self._perm_rank[e])
+            order = np.argsort(np.where(active, sortval, np.inf),
+                               kind="stable")
+            clusters: List[List[int]] = []
+            xs: List[np.ndarray] = []
+            if n:
+                sizes = balanced_sizes(n, Ktgt)
+                bounds = np.concatenate([[0], np.cumsum(sizes)])
+                clusters = [[int(d) for d in order[bounds[m]:bounds[m + 1]]]
+                            for m in range(len(sizes))]
+                for cl in clusters:
+                    if greedy:
+                        x, _ = greedy_spectrum_batched(v, cl, net, ncfg,
+                                                       prof, B, L)
+                    else:
+                        x = equal_split_x(len(cl), C)
+                    xs.append(x)
+                latency = lt.round_latency(v, clusters, xs, net, ncfg,
+                                           prof, B, L)
+            else:
+                latency = 0.0
+            sim_time += latency
+            recs.append({"round": t, "v": v, "n_active": n,
+                         "clusters": clusters,
+                         "xs": [np.asarray(x) for x in xs],
+                         "f": f.copy(), "rate": rate,
+                         "latency_s": float(latency),
+                         "sim_time_s": float(sim_time)})
+            if n == 0:
+                recs[-1]["skipped"] = "no active devices"
+            if track and n:
+                j = np.zeros(N)
+                for cl, x in zip(clusters, xs):
+                    for i, kx in zip(cl, np.asarray(x, np.float64)):
+                        fi = f[i] * ncfg.kappa
+                        t_comp = L * B * (c["gamma_dF"]
+                                          + c["gamma_dB"]) / fi
+                        t_tx = (L * B * c["xi_s"] + c["xi_d"]) \
+                            / (kx * rate[i])
+                        j[i] = (self.dcfg.p_compute_w * t_comp
+                                + self.dcfg.p_tx_w * t_tx)
+                e_un = energy - j
+                depleted |= active & (e_un <= 0.0)
+                energy = np.maximum(e_un, 0.0)
+            snr = mu_snr + self.dcfg.rho_snr * (snr - mu_snr) \
+                + coef_s * self._eps_s[t, e]
+            f = np.maximum(mu_f + self.dcfg.rho_f * (f - mu_f)
+                           + coef_f * self._eps_f[t, e], _F_FLOOR)
+        return recs
+
+    def run_looped(self) -> dict:
+        """All episodes through ``run_reference`` — the host baseline the
+        bench compares against. Returns ``{"latency": (E, T), "records",
+        "wall_s"}``."""
+        t0 = time.monotonic()
+        records = [self.run_reference(e) for e in range(self.E)]
+        wall = time.monotonic() - t0
+        lat = np.array([[r["latency_s"] for r in recs] for recs in records])
+        return {"latency": lat, "records": records, "wall_s": wall}
+
+    # -- CPSL coupling --------------------------------------------------------
+
+    def train_curves(self, result: dict, xtr, ytr, ccfg, *, xte=None,
+                     yte=None, model: str = "lenet",
+                     samples_per_device: int = 180,
+                     eval_every: int = 0) -> List[dict]:
+        """Joint latency x accuracy: run ``CPSL.run_fleet`` on the
+        episodes' slot-0 cluster layouts and merge the loss/acc curves
+        with the priced ``sim_time_s``. Requires a static scenario (no
+        churn, no energy depletion — layouts must not change across
+        rounds) and a single cut layer across the grid; clusters are
+        wrap-padded to rectangular layouts exactly like
+        ``SimEngine._padded_clusters``."""
+        from repro.core.cpsl import CPSL
+        from repro.core.splitting import make_split_model
+        from repro.data.pipeline import DeviceResidentDataset, fleet_plan
+        from repro.data.synthetic import non_iid_split
+
+        assert (self._depart >= self.T).all() and \
+            (self._arrive <= 0).all() and self.dcfg.energy_budget_j == 0, \
+            "train_curves needs a static scenario (layouts fixed per round)"
+        cuts = {sp["cut"] for sp in self.specs}
+        assert len(cuts) == 1, "one cut layer per coupled fleet"
+        v = cuts.pop()
+        assert ccfg.batch_per_device == self.fcfg.batch_per_device \
+            and ccfg.local_epochs == self.fcfg.local_epochs, \
+            "training and pricing must agree on (B, L)"
+
+        trace = result["trace"]
+        layouts = []
+        for e in range(self.E):
+            mask0, dev0 = trace["mask"][e, 0], trace["dev"][e, 0]
+            lay = [[int(d) for d, mk in zip(dr, mr) if mk]
+                   for dr, mr in zip(dev0, mask0) if mr.any()]
+            Kp = max(len(cl) for cl in lay)
+            layouts.append([[cl[i % len(cl)] for i in range(Kp)]
+                            for cl in lay])
+        seeds = [sp["seed"] for sp in self.specs]
+        shards = {s: non_iid_split(ytr, n_devices=self.N,
+                                   samples_per_device=samples_per_device,
+                                   seed=s) for s in set(seeds)}
+        plan = fleet_plan([shards[s] for s in seeds],
+                          ccfg.batch_per_device, layouts, seeds, self.T,
+                          ccfg.local_epochs)
+        M_pad, K_pad = plan.idx.shape[2], plan.idx.shape[4]
+        ccfg2 = dataclasses.replace(ccfg, cut_layer=v, n_clusters=M_pad,
+                                    cluster_size=K_pad)
+        cpsl = CPSL(make_split_model(model, v, conv_impl=ccfg2.conv_impl),
+                    ccfg2)
+        dsd = DeviceResidentDataset(xtr, ytr, shards[seeds[0]],
+                                    ccfg.batch_per_device,
+                                    eval_images=xte, eval_labels=yte)
+        states = cpsl.init_fleet_state(plan.seeds)
+        states, metrics = cpsl.run_fleet(
+            states, dsd.data, plan.idx, plan.weights,
+            eval_data=dsd.eval_data if eval_every else None,
+            eval_every=eval_every, cluster_mask=plan.cluster_mask,
+            client_mask=plan.client_mask)
+        jax.block_until_ready(metrics["loss"])
+        loss = np.asarray(metrics["loss"])
+        evals = metrics.get("eval")
+        out = []
+        for e, ep in enumerate(result["episodes"]):
+            rep = dict(ep, loss=[float(x) for x in loss[e]])
+            if evals is not None:
+                rep["acc"] = [float(x) for x in np.asarray(evals["acc"][e])]
+                rep["eval_rounds"] = metrics["eval_rounds"]
+            out.append(rep)
+        return out
+
+
+# --------------------------------------------------------------------------
+# trace adapters (the NumPy oracle hooks)
+# --------------------------------------------------------------------------
+
+def fleet_trace_records(result: dict, e: int) -> List[dict]:
+    """Episode ``e`` of a ``SimFleetRunner.run`` result as SimEngine-style
+    per-round records — the format ``recompute_trace_latencies`` (and any
+    JSONL trace consumer) already understands. Cluster entries are global
+    device ids indexing the full-population ``f``/``rate`` rows."""
+    trace = result["trace"]
+    v = result["episodes"][e]["cut"]
+    T = trace["latency"].shape[1]
+    recs = []
+    for t in range(T):
+        mask, dev = trace["mask"][e, t], trace["dev"][e, t]
+        clusters = [[int(d) for d, mk in zip(dr, mr) if mk]
+                    for dr, mr in zip(dev, mask) if mr.any()]
+        xs = [np.asarray([int(x) for x, mk in zip(xr, mr) if mk])
+              for xr, mr in zip(trace["xs"][e, t], mask) if mr.any()]
+        rec = {"round": t, "v": int(v), "clusters": clusters, "xs": xs,
+               "f": trace["f"][e, t], "rate": trace["rate"][e, t],
+               "latency_s": float(trace["latency"][e, t]),
+               "n_active": int(trace["n_active"][e, t])}
+        if not clusters:
+            rec["skipped"] = "no active devices"
+        recs.append(rec)
+    return recs
+
+
+def recompute_fleet_latencies(result: dict, prof: CutProfile,
+                              ncfg: NetworkCfg, B: int, L: int
+                              ) -> np.ndarray:
+    """Re-derive every episode/round latency of a fleet result from its
+    traced (f, rate, clusters, xs, v) with the NumPy
+    ``core.latency.round_latency`` — the reference-oracle acceptance
+    check for the jnp cost engine. Returns (E, T); rounds with no active
+    devices recompute to 0."""
+    E = result["trace"]["latency"].shape[0]
+    out = []
+    for e in range(E):
+        row = []
+        for rec in fleet_trace_records(result, e):
+            if rec.get("skipped"):
+                row.append(0.0)
+                continue
+            net = NetworkState(f=np.asarray(rec["f"], np.float64),
+                               rate=np.asarray(rec["rate"], np.float64))
+            row.append(lt.round_latency(rec["v"], rec["clusters"],
+                                        rec["xs"], net, ncfg, prof, B, L))
+        out.append(row)
+    return np.asarray(out)

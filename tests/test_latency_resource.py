@@ -230,6 +230,58 @@ def test_gibbs_uneven_sizes_partition():
         assert x.sum() == ncfg.n_subcarriers
 
 
+def test_equal_split_x_budget():
+    """Feasible split summing to exactly C, remainder to the leading
+    devices; K > C is infeasible and must raise."""
+    np.testing.assert_array_equal(lt.equal_split_x(5, 30), [6] * 5)
+    np.testing.assert_array_equal(lt.equal_split_x(3, 13), [5, 4, 4])
+    for K in range(1, 9):
+        for C in range(K, 20):
+            x = lt.equal_split_x(K, C)
+            assert x.sum() == C and (x >= 1).all()
+    with pytest.raises(ValueError):
+        lt.equal_split_x(7, 6)
+
+
+def test_uniform_xs_feasible_budget():
+    """Regression: ``_uniform_xs`` used to hand max(C//K, 1) per device —
+    over budget when K > C, and wasting the C mod K remainder otherwise.
+    Now every cluster's allocation sums to exactly its budget."""
+    ncfg = NetworkCfg(n_devices=10, n_subcarriers=12)
+    xs = rs._uniform_xs([[0, 1, 2, 3, 4, 5, 6], [7, 8, 9]], ncfg)
+    np.testing.assert_array_equal(xs[0], [2, 2, 2, 2, 2, 1, 1])
+    np.testing.assert_array_equal(xs[1], [4, 4, 4])
+    for x in xs:
+        assert x.sum() == ncfg.n_subcarriers  # feasible, nothing wasted
+    # K > C: the old code emitted an infeasible 1-per-device allocation
+    with pytest.raises(ValueError):
+        rs._uniform_xs([list(range(13))], ncfg)
+
+
+def test_equal_split_curve_unequal_clusters():
+    """Regression: the curve used to size every cluster like the first
+    one (``K = len(clusters[0])``), mis-pricing or crashing the unequal
+    churn-balanced layouts ``balanced_sizes`` routinely emits."""
+    from repro.core.channel import device_means as dm, sample_network as sn
+
+    ncfg = NetworkCfg(n_devices=10, n_subcarriers=12)
+    clusters = [[0, 1, 2, 3], [4, 5, 6], [7, 8, 9]]   # balanced [4, 3, 3]
+    got = lt.equal_split_curve(2, clusters, ncfg, PROF, 16, 1,
+                               rounds=3, seed=5)
+    mu_f, mu_snr = dm(ncfg, 5)
+    rng = np.random.default_rng(5)
+    xs = [lt.equal_split_x(len(c), ncfg.n_subcarriers) for c in clusters]
+    t, want = 0.0, []
+    for _ in range(3):
+        net = sn(ncfg, mu_f, mu_snr, rng)
+        t += lt.round_latency(2, clusters, xs, net, ncfg, PROF, 16, 1)
+        want.append(t)
+    np.testing.assert_allclose(got, want, rtol=0)
+    # every cluster priced at its own size, budget exactly spent
+    for c, x in zip(clusters, xs):
+        assert len(x) == len(c) and x.sum() == ncfg.n_subcarriers
+
+
 def test_lm_profile_all_archs():
     from repro.configs import registry
     for arch in registry.list_archs():

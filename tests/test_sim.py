@@ -97,6 +97,33 @@ def test_energy_depletion_departs_device():
     assert proc.n_active == 1
 
 
+def test_energy_pinned_departure_carries_cause():
+    """Regression: a floor-pinned, already-depleted device that finally
+    leaves used to emit a bare "depart" — indistinguishable from churn,
+    so energy-driven departures were undercounted. The departure now
+    carries cause="energy_depleted"."""
+    ncfg = NetworkCfg(n_devices=2)
+    proc = NetworkProcess(ncfg, DynamicsCfg(
+        energy_budget_j=1.0, min_devices=2, p_arrive=1.0, seed=0))
+    ev = proc.consume([0], [2.0])
+    # pinned at the floor: depletion recorded, device stays active
+    assert [e.kind for e in ev] == ["energy_depleted"]
+    assert proc.n_active == 2 and proc.energy[0] == 0.0
+    # an arrival lifts the floor; the pinned device now actually leaves
+    assert [e.kind for e in proc.sample_arrivals()] == ["arrive"]
+    ev = proc.consume([0], [0.1])
+    assert [e.kind for e in ev] == ["depart"] and ev[0].device == 0
+    assert ev[0].cause == "energy_depleted"
+    assert ev[0].to_dict()["cause"] == "energy_depleted"
+    assert proc.n_active == 2
+    # ordinary churn departures carry no cause
+    assert all(e.cause is None
+               for e in NetworkProcess(
+                   ncfg, DynamicsCfg(forced_departures={0: (0,)},
+                                     min_devices=1, seed=0)
+               ).sample_departures(0))
+
+
 # --------------------------------------------------------------------------
 # batched evaluation
 # --------------------------------------------------------------------------

@@ -1,0 +1,247 @@
+"""repro.sim.fleet — jnp episode-fleet simulator: PartitionBatchJ vs the
+NumPy cost model, allocation-budget properties, frozen-scenario
+equivalence against the looped host reference / recompute oracle, churn
+and energy schedules, stationary law of the jnp dynamics port, and the
+CPSL training coupling."""
+import numpy as np
+import pytest
+
+from repro.configs.base import SimFleetCfg
+from repro.core import latency as lt
+from repro.core import profile as pf
+from repro.core.channel import NetworkCfg, NetworkState, device_means, \
+    sample_network
+from repro.core.latency import PartitionBatch, equal_split_x
+from repro.sim.dynamics import DynamicsCfg
+from repro.sim.engine import recompute_trace_latencies
+from repro.sim.fleet import (PartitionBatchJ, SimFleetRunner,
+                             fleet_trace_records)
+
+PROF = pf.lenet_profile()
+
+
+def _runner(n=8, c=12, rounds=5, seeds=(0, 1), policies=("equal", "greedy"),
+            cluster_sizes=(3,), cuts=(2, 3), dcfg=None, **kw):
+    ncfg = NetworkCfg(n_devices=n, n_subcarriers=c)
+    dcfg = dcfg or DynamicsCfg(rho_snr=0.9, rho_f=0.95, seed=0)
+    fcfg = SimFleetCfg(rounds=rounds, seeds=seeds, policies=policies,
+                       cluster_sizes=cluster_sizes, cuts=cuts,
+                       batch_per_device=16, local_epochs=1)
+    return SimFleetRunner(PROF, ncfg, dcfg, fcfg, **kw), ncfg
+
+
+# --------------------------------------------------------------------------
+# jnp cost engine vs the NumPy PartitionBatch
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,sizes", [(0, [3, 2, 2]), (1, [4, 3, 3]),
+                                        (2, [2, 2, 2])])
+def test_partition_batch_j_matches_numpy(seed, sizes):
+    """Randomized (per-replica cut, unequal sizes, stacked draws) grids:
+    the jnp port agrees with the NumPy evaluator to float64 tolerance."""
+    rng = np.random.default_rng(seed)
+    N = int(sum(sizes))
+    R, S = 6, 3
+    ncfg = NetworkCfg(n_devices=N, n_subcarriers=2 * N)
+    mu_f, mu_snr = device_means(ncfg, seed)
+    nets = [sample_network(ncfg, mu_f, mu_snr, rng) for _ in range(S)]
+    snet = NetworkState(f=np.stack([n.f for n in nets]),
+                        rate=np.stack([n.rate for n in nets]))
+    v = rng.integers(1, PROF.n_cuts + 1, size=R)
+    rows = rng.integers(0, S, size=R)
+    dev = np.stack([rng.permutation(N) for _ in range(R)])
+    xs = rng.integers(1, 7, size=(R, N))
+    pb = PartitionBatch(v, snet, ncfg, PROF, 16, 2, sizes, dev,
+                        net_rows=rows)
+    pbj = PartitionBatchJ(v, snet, ncfg, PROF, 16, 2, sizes, dev,
+                          net_rows=rows)
+    np.testing.assert_allclose(pbj.cluster_latencies(xs),
+                               pb.cluster_latencies(xs), rtol=1e-12)
+    np.testing.assert_allclose(pbj.latencies(xs), pb.latencies(xs),
+                               rtol=1e-12)
+
+
+@pytest.mark.parametrize("physical", [False, True])
+def test_partition_batch_j_broadcast_and_scalar_cut(physical):
+    """Single device row scored against P candidate allocations (the
+    BatchedClusterEvaluator shape), scalar cut, physical_gradients."""
+    rng = np.random.default_rng(7)
+    ncfg = NetworkCfg(n_devices=5, n_subcarriers=10)
+    net = sample_network(ncfg, *device_means(ncfg, 7), rng)
+    xs = rng.integers(1, 6, size=(17, 5))
+    pb = PartitionBatch(2, net, ncfg, PROF, 16, 1, [5], np.arange(5),
+                        physical_gradients=physical)
+    pbj = PartitionBatchJ(2, net, ncfg, PROF, 16, 1, [5], np.arange(5),
+                          physical_gradients=physical)
+    np.testing.assert_allclose(pbj.latencies(xs), pb.latencies(xs),
+                               rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# frozen-scenario equivalence: batched episodes == looped host pricing
+# --------------------------------------------------------------------------
+
+def test_fleet_matches_host_reference():
+    """Per-round latencies match the looped NumPy mirror to tight float64
+    tolerance, and every clustering / allocation decision is identical —
+    across both policies, two cuts, forced churn."""
+    dcfg = DynamicsCfg(rho_snr=0.9, rho_f=0.95, seed=0,
+                       forced_departures={2: (1,), 3: (0, 4)})
+    runner, _ = _runner(dcfg=dcfg)
+    res = runner.run()
+    ref = runner.run_looped()
+    np.testing.assert_allclose(res["trace"]["latency"], ref["latency"],
+                               rtol=1e-11)
+    for e in range(runner.E):
+        recs = fleet_trace_records(res, e)
+        for t in range(runner.T):
+            assert recs[t]["clusters"] == ref["records"][e][t]["clusters"]
+            for a, b in zip(recs[t]["xs"], ref["records"][e][t]["xs"]):
+                np.testing.assert_array_equal(a, b)
+
+
+def test_fleet_recompute_oracle():
+    """The engine-level oracle: re-deriving every traced round with the
+    NumPy ``round_latency`` from the recorded (f, rate, clusters, xs, v)
+    reproduces the jnp-computed latencies."""
+    runner, ncfg = _runner()
+    res = runner.run()
+    want = recompute_trace_latencies(res, PROF, ncfg, 16, 1)
+    assert want.shape == res["trace"]["latency"].shape
+    np.testing.assert_allclose(res["trace"]["latency"], want, rtol=1e-12)
+
+
+def test_fleet_forced_departure_removes_device():
+    dcfg = DynamicsCfg(seed=0, forced_departures={2: (1,)})
+    runner, _ = _runner(dcfg=dcfg, policies=("equal",), cuts=(3,))
+    res = runner.run()
+    for e in range(runner.E):
+        recs = fleet_trace_records(res, e)
+        for t, rec in enumerate(recs):
+            members = [d for c in rec["clusters"] for d in c]
+            assert (1 in members) == (t < 2)
+
+
+def test_fleet_same_seed_episodes_share_network():
+    """Episodes sharing a seed (the CRN axis) see identical network
+    trajectories even when cut/policy differ."""
+    runner, _ = _runner(seeds=(5,), policies=("equal", "greedy"),
+                        cuts=(1, 4))
+    res = runner.run()
+    f = res["trace"]["f"]
+    for e in range(1, runner.E):
+        np.testing.assert_array_equal(f[e], f[0])
+        np.testing.assert_array_equal(res["trace"]["rate"][e],
+                                      res["trace"]["rate"][0])
+
+
+# --------------------------------------------------------------------------
+# allocation properties (jnp policies)
+# --------------------------------------------------------------------------
+
+def test_fleet_allocations_sum_to_budget():
+    """Both policies allocate >= 1 subcarrier per real device slot and
+    sum to exactly the C budget on every real cluster of every slot."""
+    runner, ncfg = _runner(n=10, c=13, cluster_sizes=(4,), seeds=(0, 1, 2))
+    res = runner.run()
+    xs, mask = res["trace"]["xs"], res["trace"]["mask"]
+    csize = res["trace"]["csize"]
+    assert (xs[mask] >= 1).all()
+    sums = np.where(mask, xs, 0).sum(axis=-1)          # (E, T, M)
+    real = csize > 0
+    assert (sums[real] == ncfg.n_subcarriers).all()
+    assert (sums[~real] == 0).all()
+
+
+def test_fleet_equal_split_remainder_matches_helper():
+    """The jnp equal-split mirrors ``equal_split_x`` (remainder handed to
+    the leading devices) on unequal churn-balanced clusters."""
+    runner, ncfg = _runner(n=7, c=13, policies=("equal",), cuts=(3,),
+                           seeds=(0,), cluster_sizes=(3,))
+    res = runner.run()
+    recs = fleet_trace_records(res, 0)
+    sizes = [len(c) for c in recs[0]["clusters"]]
+    assert sizes == [3, 2, 2]
+    for x, k in zip(recs[0]["xs"], sizes):
+        np.testing.assert_array_equal(x, equal_split_x(k, 13))
+
+
+# --------------------------------------------------------------------------
+# energy + arrivals
+# --------------------------------------------------------------------------
+
+def test_fleet_energy_depletion_is_permanent():
+    """A tiny budget depletes everyone after round one: later rounds have
+    no active devices and zero latency, and the oracle still agrees on
+    the full (E, T) grid."""
+    dcfg = DynamicsCfg(seed=1, energy_budget_j=1e-4)
+    runner, ncfg = _runner(n=6, c=12, dcfg=dcfg, seeds=(0,),
+                           policies=("greedy",), cuts=(3,))
+    res = runner.run()
+    n_active = res["trace"]["n_active"][0]
+    assert n_active[0] == 6 and (n_active[1:] == 0).all()
+    assert (res["trace"]["latency"][0][1:] == 0).all()
+    assert res["trace"]["latency"][0][0] > 0
+    want = recompute_trace_latencies(res, PROF, ncfg, 16, 1)
+    np.testing.assert_allclose(res["trace"]["latency"], want, rtol=1e-12)
+    np.testing.assert_allclose(res["trace"]["latency"],
+                               runner.run_looped()["latency"], rtol=1e-11)
+
+
+def test_fleet_arrival_schedule():
+    arrive = np.zeros(6, np.int64)
+    arrive[4] = 2
+    runner, _ = _runner(n=6, c=12, seeds=(0,), policies=("equal",),
+                        cuts=(3,), arrive_slots=arrive)
+    res = runner.run()
+    act = res["trace"]["active"][0]
+    assert not act[:2, 4].any() and act[2:, 4].all()
+    assert res["trace"]["n_active"][0].tolist() == [5, 5, 6, 6, 6]
+
+
+# --------------------------------------------------------------------------
+# dynamics law
+# --------------------------------------------------------------------------
+
+def test_fleet_dynamics_stationary_moments():
+    """The jnp AR(1) port preserves the static N(mu, sigma^2) law (same
+    property the host NetworkProcess test pins)."""
+    ncfg = NetworkCfg(n_devices=4, homogeneous=True)
+    dcfg = DynamicsCfg(rho_snr=0.8, rho_f=0.8, seed=1)
+    fcfg = SimFleetCfg(rounds=3000, seeds=(0,), policies=("equal",),
+                       cluster_sizes=(4,), cuts=(1,))
+    runner = SimFleetRunner(PROF, ncfg, dcfg, fcfg)
+    res = runner.run()
+    # snr is not traced directly; recover it from the rate trace
+    rate = res["trace"]["rate"][0]
+    snr_db = 10.0 * np.log10(2.0 ** (rate / ncfg.subcarrier_bw) - 1.0)
+    assert abs(snr_db.mean() - ncfg.snr_homog_db) < 0.2
+    assert abs(snr_db.std() - ncfg.snr_sigma_db) < 0.2
+
+
+# --------------------------------------------------------------------------
+# CPSL coupling
+# --------------------------------------------------------------------------
+
+def test_fleet_train_curves_coupling():
+    """Static scenario coupled to CPSL.run_fleet: per-episode loss curves
+    merge with the priced latency clock."""
+    from repro.configs.base import CPSLConfig
+    from repro.data.synthetic import synthetic_mnist
+
+    xtr, ytr, xte, yte = synthetic_mnist(600, 100, seed=0)
+    runner, _ = _runner(n=6, c=12, rounds=2, seeds=(0, 1),
+                        policies=("equal",), cuts=(3,))
+    res = runner.run()
+    ccfg = CPSLConfig(cut_layer=3, local_epochs=1, batch_per_device=16,
+                      conv_impl="im2col", scan_rounds=True,
+                      fused_round_unroll=1)
+    reps = runner.train_curves(res, xtr, ytr, ccfg, xte=xte, yte=yte,
+                               samples_per_device=80, eval_every=2)
+    assert len(reps) == runner.E
+    for rep in reps:
+        assert len(rep["loss"]) == 2
+        assert np.isfinite(rep["loss"]).all()
+        assert len(rep["sim_time_s"]) == 2
+        assert rep["sim_time_s"][1] > rep["sim_time_s"][0] > 0
+        assert len(rep["acc"]) == 1
