@@ -1,0 +1,114 @@
+"""Deployment-runtime benchmark: measured CPSL vs sequential-SL latency.
+
+Everything else prices the paper's CPSL-vs-SL gap with the eq. 15-25
+cost model; this benchmark *measures* it. Two loopback deployments run
+on the same 4 devices with the same sampled network, with the priced
+wireless times physically injected as send delays
+(``rt.faults.wireless_delay_rules``, one common scale factor):
+
+  cpsl   2 clusters x 2 devices — cluster members run in parallel and
+         split the cluster's spectrum (x = C/K each);
+  sl     4 singleton clusters — vanilla sequential split learning, each
+         device alone with the full spectrum (x = C).
+
+CPSL overlaps its members' device time within a cluster, so measured
+wall-clock should come out ahead of the purely sequential schedule
+(fig. 7's mechanism) — asserted as
+
+    sl_wall >= RT_MIN_SPEEDUP * cpsl_wall     (default 1.0)
+
+with the floor env-overridable for noisy runners. Also cross-validates
+measured vs predicted round latency on the cpsl arm
+(``rt.crossval``) and writes the JSON result to ``--out`` /
+``$RT_BENCH_JSON`` (default /tmp/bench_rt.json) — CI uploads it.
+
+    PYTHONPATH=src python -m benchmarks.bench_rt --quick
+    PYTHONPATH=src python -m benchmarks.run --only bench_rt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.rt.crossval import crossval_report
+from repro.rt.orchestrator import Orchestrator, RTConfig, run_loopback
+
+N_DEVICES = 4
+TARGET_ROUND_S = {"quick": 0.8, "full": 2.5}   # injected delay per round
+
+
+def _arm_cfg(cluster_size: int, rounds: int, delay_scale: float) -> RTConfig:
+    return RTConfig(n_devices=N_DEVICES, cluster_size=cluster_size,
+                    rounds=rounds, local_epochs=1, batch=8,
+                    n_train=600, n_test=64, samples_per_device=80,
+                    n_subcarriers=N_DEVICES, seed=0,
+                    phase_timeout_s=120.0, rpc_timeout_s=30.0,
+                    delay_scale=delay_scale)
+
+
+def _measured_wall(records) -> float:
+    return sum(r["wall_s"] for r in records if r.get("kind") != "qos")
+
+
+def main(quick: bool = True):
+    rounds = 2 if quick else 4
+    target = TARGET_ROUND_S["quick" if quick else "full"]
+
+    # price the cpsl arm's plan once to pick a delay scale that makes
+    # the injected wireless schedule dominate compute/IPC noise
+    probe = Orchestrator(_arm_cfg(2, rounds, 0.0))
+    lat_cpsl = probe.plan_round(0).latency
+    probe.stop()
+    scale = target / lat_cpsl
+    print(f"predicted cpsl round latency {lat_cpsl:.3e}s -> "
+          f"delay scale {scale:.3e} ({target:.1f}s injected/round)")
+
+    walls, results = {}, {}
+    for arm, K in (("cpsl", 2), ("sl", 1)):
+        cfg = _arm_cfg(K, rounds, scale)
+        state, records = run_loopback(cfg)
+        walls[arm] = _measured_wall(records)
+        results[arm] = {
+            "cluster_size": K, "rounds": rounds,
+            "wall_s": walls[arm],
+            "predicted_s": sum(r.get("latency_s", 0.0) * scale
+                               for r in records if r.get("kind") != "qos"),
+            "loss": [r["loss"] for r in records if r.get("kind") != "qos"],
+        }
+        if arm == "cpsl":
+            results["crossval"] = crossval_report(records)
+        print(f"{arm:5s} (K={K}): measured {walls[arm]:.2f}s over "
+              f"{rounds} rounds")
+
+    speedup = walls["sl"] / walls["cpsl"]
+    floor = float(os.environ.get("RT_MIN_SPEEDUP", "1.0"))
+    results["speedup"] = speedup
+    results["floor"] = floor
+    results["delay_scale"] = scale
+    cv = results["crossval"]["summary"]
+    print(f"measured CPSL speedup over sequential SL: {speedup:.2f}x "
+          f"(floor {floor:.2f}x)")
+    if cv.get("n_rounds"):
+        print(f"crossval: measured/predicted ratio "
+              f"{cv['ratio_mean']:.3g} (spread {cv['ratio_rel_spread']:.2f})")
+
+    out = os.environ.get("RT_BENCH_JSON", "/tmp/bench_rt.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+
+    assert speedup >= floor, (
+        f"measured CPSL speedup {speedup:.2f}x below floor {floor:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out:
+        os.environ["RT_BENCH_JSON"] = args.out
+    main(quick=not args.full)

@@ -11,9 +11,9 @@ import time
 import traceback
 
 from benchmarks import (bench_dynamics, bench_fleet, bench_planner,
-                        bench_round, bench_simfleet, fig5_training,
-                        fig6_cluster_size, fig7_cut_layer, fig8_resource,
-                        roofline, table2_latency)
+                        bench_round, bench_rt, bench_simfleet,
+                        fig5_training, fig6_cluster_size, fig7_cut_layer,
+                        fig8_resource, roofline, table2_latency)
 
 BENCHES = {
     "table2_latency": table2_latency.main,
@@ -27,6 +27,7 @@ BENCHES = {
     "bench_round": bench_round.main,
     "bench_fleet": bench_fleet.main,
     "bench_simfleet": bench_simfleet.main,
+    "bench_rt": bench_rt.main,
 }
 
 

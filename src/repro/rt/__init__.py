@@ -1,0 +1,32 @@
+"""repro.rt — multi-process CPSL deployment runtime.
+
+Everything else in the repo *simulates* CPSL's wireless schedule; this
+package *executes* it: N device worker processes and one server process
+run real CPSL rounds over localhost sockets — devices run
+``SplitModel.device_apply`` forward and ship serialized smashed
+activations, the server runs ``server_loss``/backward and returns
+cut-layer gradients, and the orchestrator drives the paper's
+cluster-parallel-then-sequential schedule from a ``Plan`` produced by
+the ``sim.controller`` two-timescale planner.
+
+Modules:
+  protocol      length-prefixed msgpack wire format, versioned msg types
+  transport     framed Channel: timeouts, retry/backoff, fault hooks
+  faults        deterministic delay/drop/disconnect/slow injection
+  qos           measured per-device phase timings (telemetry schema)
+  device        the device worker process (``device_main``)
+  server        server-side numerics + straggler drop-or-wait policy
+  orchestrator  spawn/plan/drive/collect (``run_loopback``)
+  crossval      measured vs sim-predicted round latency, side by side
+
+Correctness contract: a loopback run with 2 clusters x 2 devices
+reproduces the in-process looped ``CPSL.run_round`` bit-exactly (same
+rng streams, same batch index tables) — tests/test_rt_loopback.py.
+"""
+from repro.rt.faults import FaultInjector, FaultRule, wireless_delay_rules
+from repro.rt.orchestrator import Orchestrator, RTConfig, run_loopback
+from repro.rt.protocol import MsgType, ProtocolError
+
+__all__ = ["FaultInjector", "FaultRule", "wireless_delay_rules",
+           "Orchestrator", "RTConfig", "run_loopback", "MsgType",
+           "ProtocolError"]

@@ -1,0 +1,144 @@
+"""Deterministic fault injection for the deployment runtime.
+
+A ``FaultRule`` matches outgoing messages on a device's channel (by
+message type and round) or the device's compute phase, and fires a
+bounded number of times — chaos tests stay reproducible because the
+match counters are plain deterministic state, no randomness anywhere.
+
+Kinds:
+  delay        sleep ``delay_s`` before sending the matched message
+               (wireless airtime / slow-link emulation)
+  drop         swallow the matched message (the device believes it sent;
+               exercises the retry/backoff path)
+  disconnect   hard-close the socket on the matched send (mid-round
+               device failure; exercises straggler drop + masked loss)
+  slow         sleep ``delay_s`` before the device-side forward pass
+               (slow-device emulation; exercises drop-or-wait policy)
+
+``wireless_delay_rules`` maps a sim ``Plan`` + ``NetworkState`` onto
+per-device delay rules priced by the eq. 15-25 cost model, so loopback
+wall-clock reflects the paper's wireless schedule: the SMASHED send
+carries one local iteration's device time (tau_d + tau_s + tau_g +
+tau_u) and the AGG upload carries the model uplink (tau_t). That is
+what lets ``benchmarks/bench_rt.py`` *measure* the fig. 7 CPSL-vs-SL
+gap instead of pricing it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.rt.protocol import MsgType
+
+
+class InjectedDisconnect(RuntimeError):
+    """Raised device-side after a 'disconnect' rule closes the socket."""
+
+
+@dataclass
+class FaultRule:
+    kind: str                                 # delay | drop | disconnect | slow
+    delay_s: float = 0.0
+    msg_types: Optional[Tuple[int, ...]] = None   # None = any message
+    rounds: Optional[Tuple[int, ...]] = None      # None = any round
+    times: Optional[int] = None               # max firings; None = unlimited
+    after: int = 0                            # skip this many matches first
+    hits: int = field(default=0, compare=False)   # match counter (state)
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "delay_s": self.delay_s,
+                "msg_types": (None if self.msg_types is None
+                              else [int(t) for t in self.msg_types]),
+                "rounds": (None if self.rounds is None
+                           else [int(r) for r in self.rounds]),
+                "times": self.times, "after": self.after}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultRule":
+        kw = dict(d)
+        for k in ("msg_types", "rounds"):
+            if kw.get(k) is not None:
+                kw[k] = tuple(kw[k])
+        return cls(**kw)
+
+    def _fire(self) -> bool:
+        """Count a match; True when this occurrence is inside the
+        [after, after+times) firing window."""
+        n = self.hits
+        self.hits += 1
+        if n < self.after:
+            return False
+        return self.times is None or n < self.after + self.times
+
+
+class FaultInjector:
+    """Per-device rule set, consulted by ``transport.Channel`` on every
+    send and by the device worker before its forward pass."""
+
+    def __init__(self, rules: Sequence[FaultRule] = ()):
+        self.rules: List[FaultRule] = list(rules)
+
+    def on_send(self, mtype: MsgType, rnd: Optional[int]
+                ) -> Optional[Tuple[str, float]]:
+        """First matching send-rule action for this message, as
+        ``(kind, delay_s)``; None = send normally."""
+        for r in self.rules:
+            if r.kind == "slow":
+                continue
+            if r.msg_types is not None and int(mtype) not in r.msg_types:
+                continue
+            if r.rounds is not None and (rnd is None
+                                         or int(rnd) not in r.rounds):
+                continue
+            if r._fire():
+                return r.kind, r.delay_s
+        return None
+
+    def compute_delay(self, rnd: Optional[int]) -> float:
+        """Total 'slow' sleep to apply before this round's forward."""
+        total = 0.0
+        for r in self.rules:
+            if r.kind != "slow":
+                continue
+            if r.rounds is not None and (rnd is None
+                                         or int(rnd) not in r.rounds):
+                continue
+            if r._fire():
+                total += r.delay_s
+        return total
+
+    def sleep_compute(self, rnd: Optional[int]):
+        d = self.compute_delay(rnd)
+        if d > 0:
+            time.sleep(d)
+
+
+def wireless_delay_rules(plan, net, ncfg, prof, B: int,
+                         scale: float = 1.0) -> Dict[int, List[FaultRule]]:
+    """Per-device delay rules pricing the executed plan with the
+    eq. 15-25 model (``{global_id: [rules]}``): each local iteration's
+    device-side time rides on the SMASHED send, the end-of-cluster model
+    upload on the AGG send. ``scale`` compresses wall-clock (e.g. 1e-3
+    => simulated seconds become milliseconds) so benchmarks stay fast
+    while preserving the schedule's *relative* geometry."""
+    c = prof.at(plan.v)
+    rules: Dict[int, List[FaultRule]] = {}
+    for cluster, x in zip(plan.clusters, plan.xs):
+        for i, xi in zip(cluster, np.asarray(x, dtype=np.float64)):
+            f = net.f[i] * ncfg.kappa
+            r = net.rate[i]
+            tau_iter = (B * c["gamma_dF"] / f          # (16) device FP
+                        + B * c["xi_s"] / (xi * r)     # (17) smashed UL
+                        + c["xi_g"] / (xi * r)         # (20) grad DL
+                        + B * c["gamma_dB"] / f)       # (21) device BP
+            tau_t = c["xi_d"] / (xi * r)               # (23) model UL
+            rules[int(plan.ids[i])] = [
+                FaultRule("delay", delay_s=float(scale * tau_iter),
+                          msg_types=(int(MsgType.SMASHED),)),
+                FaultRule("delay", delay_s=float(scale * tau_t),
+                          msg_types=(int(MsgType.AGG),)),
+            ]
+    return rules

@@ -1,0 +1,277 @@
+"""Deployment orchestrator: bind, spawn, plan, run, tear down.
+
+``Orchestrator`` stands a full CPSL deployment up on localhost: it binds
+an ephemeral TCP port, spawns ``n_devices`` worker processes
+(``rt.device.device_main`` via the 'spawn' context — workers build their
+own jax), handshakes (REGISTER -> PLAN -> READY), and then drives
+``rounds`` CPSL rounds through ``rt.server.RTServer``.
+
+Resource plans come from the SAME machinery the simulator uses:
+
+  * ``plan="fixed"``    contiguous clusters of ``cluster_size`` with the
+                        eq.-14 equal spectrum split — the deterministic
+                        layout the bit-exactness tests pin against the
+                        in-process reference;
+  * ``plan="controller"`` a ``sim.controller.TwoTimescaleController`` in
+                        fixed-cut mode re-runs Gibbs clustering + greedy
+                        spectrum (Algs. 3/4) on the sampled network every
+                        round, so the deployed layout tracks the paper's
+                        resource management.
+
+Either way the executed plan is priced with the eq. 15-25 cost model and
+recorded per round (``planned_latency_s`` / ``latency_s``) next to the
+measured ``wall_s`` — the pairing ``rt.crossval`` consumes. With
+``delay_scale > 0`` the priced per-device times are also *injected* as
+send delays (``faults.wireless_delay_rules``), so measured wall-clock
+actually exhibits the wireless schedule instead of just predicting it.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import socket
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.rt.device import build_shards, device_main
+from repro.rt.faults import FaultRule, wireless_delay_rules
+from repro.rt.protocol import MsgType
+from repro.rt.server import RTServer
+from repro.rt.transport import Channel
+from repro.telemetry import TraceWriter
+
+
+@dataclass
+class RTConfig:
+    # deployment shape
+    n_devices: int = 4
+    cluster_size: int = 2            # K (fixed plan: contiguous clusters)
+    rounds: int = 2
+    # CPSL hyper-parameters (mirrors CPSLConfig; fused_step is forced off
+    # — the runtime IS the explicit two-phase protocol)
+    cut: int = 3                     # v
+    local_epochs: int = 1            # L
+    batch: int = 8                   # B
+    optimizer: str = "sgd"
+    lr_device: float = 0.05
+    lr_server: float = 0.25
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    seed: int = 0
+    # data spec (rebuilt identically on server and every worker)
+    n_train: int = 2000
+    n_test: int = 256
+    classes_per_device: int = 3
+    samples_per_device: int = 120
+    data_seed: Optional[int] = None  # None = seed
+    # transport / robustness
+    host: str = "127.0.0.1"
+    port: int = 0                    # 0 = ephemeral; workers get the real one
+    rpc_timeout_s: float = 5.0
+    retries: int = 3
+    backoff_s: float = 0.25
+    phase_timeout_s: float = 30.0
+    straggler_policy: str = "drop"   # drop | wait  (see rt.server)
+    heartbeat_s: float = 0.5
+    hb_timeout_s: float = 2.5
+    connect_timeout_s: float = 20.0
+    ready_timeout_s: float = 300.0   # worker jax import + jit warmup budget
+    warmup: bool = True
+    # resource management
+    plan: str = "fixed"              # fixed | controller
+    n_subcarriers: Optional[int] = None   # None = n_devices
+    gibbs_iters: int = 30            # controller mode only
+    # faults / telemetry
+    faults: Dict[int, List] = field(default_factory=dict)
+    delay_scale: float = 0.0         # >0: inject eq. 15-25 delays, scaled
+    trace_path: Optional[str] = None
+
+    @property
+    def n_clusters(self) -> int:
+        return -(-self.n_devices // self.cluster_size)
+
+    def ccfg(self):
+        from repro.configs.base import CPSLConfig
+        return CPSLConfig(
+            cut_layer=self.cut, n_clusters=self.n_clusters,
+            cluster_size=self.cluster_size, local_epochs=self.local_epochs,
+            lr_device=self.lr_device, lr_server=self.lr_server,
+            batch_per_device=self.batch, optimizer=self.optimizer,
+            momentum=self.momentum, weight_decay=self.weight_decay,
+            fused_step=False)
+
+    def data_spec(self) -> dict:
+        return {"n_train": self.n_train, "n_test": self.n_test,
+                "data_seed": (self.seed if self.data_seed is None
+                              else self.data_seed),
+                "n_devices": self.n_devices,
+                "classes_per_device": self.classes_per_device,
+                "samples_per_device": self.samples_per_device}
+
+
+class Orchestrator:
+    def __init__(self, cfg: RTConfig):
+        self.cfg = cfg
+        self.listener: Optional[socket.socket] = None
+        self.procs: List[mp.Process] = []
+        self.server: Optional[RTServer] = None
+        self.writer = TraceWriter(cfg.trace_path, fresh=True)
+        self.metrics: List[dict] = []
+
+        from repro.core.channel import device_means, sample_network
+        from repro.core.channel import NetworkCfg
+        from repro.core.latency import equal_split_x, round_latency
+        from repro.core.profile import lenet_profile
+
+        cfgN = cfg.n_devices
+        self.prof = lenet_profile()
+        self.C = cfg.n_subcarriers or cfgN
+        self.ncfg = NetworkCfg(n_devices=cfgN, n_subcarriers=self.C)
+        mu_f, mu_snr = device_means(self.ncfg, seed=cfg.seed)
+        self.net = sample_network(self.ncfg, mu_f, mu_snr,
+                                  np.random.default_rng(cfg.seed))
+        self._equal_split_x = equal_split_x
+        self._round_latency = round_latency
+
+        if cfg.plan == "controller":
+            from repro.configs.base import SimCfg
+            from repro.sim.controller import TwoTimescaleController
+            self.ctrl = TwoTimescaleController(
+                self.prof, self.ncfg, cfg.batch, cfg.local_epochs,
+                SimCfg(cluster_size=cfg.cluster_size, seed=cfg.seed,
+                       gibbs_iters=cfg.gibbs_iters))
+            self.ctrl.v = cfg.cut    # fixed-cut mode: skip Alg. 2
+        else:
+            self.ctrl = None
+
+    # -- planning --------------------------------------------------------
+
+    def plan_round(self, rnd: int):
+        """The slot's resource plan (see module docstring)."""
+        from repro.sim.controller import Plan
+        cfg = self.cfg
+        ids = np.arange(cfg.n_devices)
+        if self.ctrl is not None:
+            return self.ctrl.plan_slot(self.net, ids, rnd)
+        K = cfg.cluster_size
+        clusters = [list(range(m * K, min((m + 1) * K, cfg.n_devices)))
+                    for m in range(cfg.n_clusters)]
+        xs = [self._equal_split_x(len(c), self.C) for c in clusters]
+        lat = self._round_latency(cfg.cut, clusters, xs, self.net,
+                                  self.ncfg, self.prof, cfg.batch,
+                                  cfg.local_epochs)
+        return Plan(v=cfg.cut, clusters=clusters, ids=ids, xs=xs,
+                    latency=float(lat))
+
+    def _worker_faults(self) -> Dict[int, List[dict]]:
+        cfg = self.cfg
+        out: Dict[int, List[dict]] = {
+            int(g): [r.to_dict() if isinstance(r, FaultRule) else dict(r)
+                     for r in rules]
+            for g, rules in (cfg.faults or {}).items()}
+        if cfg.delay_scale > 0:
+            wireless = wireless_delay_rules(
+                self.plan_round(0), self.net, self.ncfg, self.prof,
+                cfg.batch, scale=cfg.delay_scale)
+            for g, rules in wireless.items():
+                out.setdefault(g, []).extend(r.to_dict() for r in rules)
+        return out
+
+    # -- lifecycle -------------------------------------------------------
+
+    def start(self):
+        """Bind, spawn workers, handshake, warm up both sides."""
+        cfg = self.cfg
+        from repro.core.cpsl import CPSL
+        from repro.core.splitting import make_split_model
+
+        _, labels, shards = build_shards(cfg.data_spec())
+        cpsl = CPSL(make_split_model("lenet", cfg.cut), cfg.ccfg())
+        self.server = RTServer(cfg, cpsl, shards, labels, self.writer)
+
+        self.listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.listener.bind((cfg.host, cfg.port))
+        self.listener.listen(cfg.n_devices)
+        port = self.listener.getsockname()[1]
+
+        faults = self._worker_faults()
+        ctx = mp.get_context("spawn")   # workers must re-init jax cleanly
+        for gid in range(cfg.n_devices):
+            wcfg = {"host": cfg.host, "port": port, "device": gid,
+                    "faults": faults.get(gid, []),
+                    "rpc_timeout_s": cfg.rpc_timeout_s,
+                    "retries": cfg.retries, "backoff_s": cfg.backoff_s,
+                    "heartbeat_s": cfg.heartbeat_s,
+                    "connect_timeout_s": cfg.connect_timeout_s,
+                    "plan_timeout_s": cfg.ready_timeout_s}
+            p = ctx.Process(target=device_main, args=(wcfg,), daemon=True)
+            p.start()
+            self.procs.append(p)
+
+        plan_msg = {"model": "lenet", "v": cfg.cut,
+                    "local_epochs": cfg.local_epochs, "batch": cfg.batch,
+                    "seed": cfg.seed, "optimizer": cfg.optimizer,
+                    "lr_device": cfg.lr_device, "momentum": cfg.momentum,
+                    "weight_decay": cfg.weight_decay,
+                    "warmup": cfg.warmup, "data": cfg.data_spec()}
+        deadline = time.monotonic() + cfg.ready_timeout_s
+        registered = 0
+        while registered < cfg.n_devices:
+            self.listener.settimeout(max(0.1, deadline - time.monotonic()))
+            try:
+                sock, _ = self.listener.accept()
+            except socket.timeout:
+                raise TimeoutError(
+                    f"only {registered}/{cfg.n_devices} devices registered")
+            ch = Channel(sock)
+            mtype, msg = ch.recv(timeout=10.0)
+            assert mtype == MsgType.REGISTER, mtype
+            gid = int(msg["device"])
+            self.server.attach(gid, ch)
+            ch.send(MsgType.PLAN, plan_msg)
+            registered += 1
+
+        ready = self.server.wait_ready(
+            set(range(cfg.n_devices)),
+            timeout=max(1.0, deadline - time.monotonic()))
+        if not ready:
+            raise TimeoutError("no device ever became READY")
+        if cfg.warmup:
+            self.server.warmup()
+
+    def run(self):
+        """Drive all rounds; returns (final state, trace records)."""
+        for rnd in range(self.cfg.rounds):
+            plan = self.plan_round(rnd)
+            self.metrics.append(self.server.run_round(rnd, plan,
+                                                      net=self.net))
+        return self.server.state, self.writer.records
+
+    def stop(self, linger_s: float = 3.0):
+        if self.server is not None:
+            try:
+                self.server.shutdown(linger_s)
+            except Exception:
+                pass
+        for p in self.procs:
+            p.join(timeout=5.0)
+        for p in self.procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=2.0)
+        if self.listener is not None:
+            self.listener.close()
+
+
+def run_loopback(cfg: RTConfig):
+    """Stand a loopback deployment up, run it, tear it down. Returns
+    (final CPSL state dict, list of trace record dicts)."""
+    orch = Orchestrator(cfg)
+    try:
+        orch.start()
+        return orch.run()
+    finally:
+        orch.stop()

@@ -1,0 +1,172 @@
+"""Wire format for the CPSL deployment runtime.
+
+Frames are length-prefixed msgpack:
+
+    +-------+---------+----------+-----+-------------------+
+    | magic | version | msg type | pad | body length (u32) |  8-byte header
+    +-------+---------+----------+-----+-------------------+
+    |                msgpack-encoded payload               |
+    +------------------------------------------------------+
+
+The payload codec round-trips the pytrees the CPSL protocol actually
+ships (device/optimizer params, smashed activations, cut-layer
+gradients) exactly:
+
+  * numpy / jax arrays -> ``{"__nd__": {dtype-name, shape, raw bytes}}``
+    — dtype by *name* so extension dtypes (bfloat16 via ml_dtypes)
+    survive; 0-d arrays keep shape ``[]``. Anything exposing
+    ``__array__`` (jax device arrays, np scalars) is materialized to
+    host numpy first, so callers never pre-convert.
+  * tuples -> ``{"__tuple__": [...]}`` — msgpack would silently decode
+    them as lists, but optimizer states are tuples (sgd's is the empty
+    tuple) and pytree *structure* must survive the wire for the
+    bit-exactness contract.
+
+Bit-exactness note: arrays cross the wire as raw ``tobytes`` and come
+back via ``frombuffer`` — the identity roundtrip the loopback
+equivalence test relies on (no float re-encoding anywhere).
+
+Errors: ``VersionMismatch`` (bad magic or version byte), ``BadFrame``
+(unknown message type / malformed payload), ``TruncatedFrame`` (EOF or
+stall mid-frame), ``ConnectionClosed`` (clean EOF between frames). All
+derive from ``ProtocolError``.
+"""
+from __future__ import annotations
+
+import enum
+import struct
+from typing import Any, Tuple
+
+import msgpack
+import numpy as np
+
+MAGIC = 0xC5
+VERSION = 1
+HEADER = struct.Struct(">BBBxI")   # magic, version, msg type, pad, length
+MAX_FRAME = 1 << 30                # sanity bound: 1 GiB
+
+
+class MsgType(enum.IntEnum):
+    REGISTER = 1       # device -> server: {device}
+    PLAN = 2           # server -> device: static run parameters
+    CLUSTER_START = 3  # server -> device: {round, m, k, members, dev,
+                       #                    dev_opt, step}
+    SMASHED = 4        # device -> server: {round, m, epoch, k, smashed}
+    GRAD = 5           # server -> device: {round, m, epoch, g}
+    AGG = 6            # device -> server: {round, m, k, dev, dev_opt, qos}
+    AGG_ACK = 7        # server -> device: {round, m}
+    HEARTBEAT = 8      # device -> server: {device, t}
+    SHUTDOWN = 9       # server -> device: {}
+    BYE = 10           # device -> server: {device}
+    ERROR = 11         # server -> device: {reason} (e.g. dropped straggler)
+    READY = 12         # device -> server: warmup/jit done, {device}
+
+
+class ProtocolError(RuntimeError):
+    pass
+
+
+class VersionMismatch(ProtocolError):
+    pass
+
+
+class BadFrame(ProtocolError):
+    pass
+
+
+class TruncatedFrame(ProtocolError):
+    pass
+
+
+class ConnectionClosed(ProtocolError):
+    pass
+
+
+# -- payload codec -----------------------------------------------------------
+
+def _enc(o: Any) -> Any:
+    if isinstance(o, np.ndarray):
+        shape = list(o.shape)          # before ascontiguousarray: it
+        a = np.ascontiguousarray(o)    # promotes 0-d -> (1,)
+        return {"__nd__": {"dtype": a.dtype.name, "shape": shape,
+                           "data": a.tobytes()}}
+    if isinstance(o, np.generic):      # numpy scalar: keep its dtype
+        return _enc(np.asarray(o))
+    if isinstance(o, tuple):
+        return {"__tuple__": [_enc(x) for x in o]}
+    if isinstance(o, list):
+        return [_enc(x) for x in o]
+    if isinstance(o, dict):
+        return {k: _enc(v) for k, v in o.items()}
+    if hasattr(o, "__array__") and not isinstance(o, (str, bytes)):
+        return _enc(np.asarray(o))     # jax device arrays etc.
+    return o
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        # extension dtypes are registered by ml_dtypes (a jax dep)
+        import ml_dtypes                      # noqa: F401
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _dec(o: Any) -> Any:
+    if isinstance(o, dict):
+        if "__nd__" in o and len(o) == 1:
+            d = o["__nd__"]
+            arr = np.frombuffer(d["data"], dtype=_np_dtype(d["dtype"]))
+            return arr.reshape(d["shape"])
+        if "__tuple__" in o and len(o) == 1:
+            return tuple(_dec(x) for x in o["__tuple__"])
+        return {k: _dec(v) for k, v in o.items()}
+    if isinstance(o, list):
+        return [_dec(x) for x in o]
+    return o
+
+
+def encode_payload(obj: Any) -> bytes:
+    return msgpack.packb(_enc(obj), use_bin_type=True)
+
+
+def decode_payload(raw: bytes) -> Any:
+    try:
+        obj = msgpack.unpackb(raw, raw=False, strict_map_key=False)
+    except Exception as e:              # malformed msgpack
+        raise BadFrame(f"undecodable payload: {e}") from e
+    return _dec(obj)
+
+
+# -- framing -----------------------------------------------------------------
+
+def frame(mtype: MsgType, payload: Any) -> bytes:
+    body = encode_payload(payload)
+    return HEADER.pack(MAGIC, VERSION, int(mtype), len(body)) + body
+
+
+def parse_header(hdr: bytes) -> Tuple[MsgType, int]:
+    if len(hdr) != HEADER.size:
+        raise TruncatedFrame(f"short header: {len(hdr)} bytes")
+    magic, version, mtype, length = HEADER.unpack(hdr)
+    if magic != MAGIC:
+        raise VersionMismatch(f"bad magic 0x{magic:02x}")
+    if version != VERSION:
+        raise VersionMismatch(f"peer speaks v{version}, we speak v{VERSION}")
+    if length > MAX_FRAME:
+        raise BadFrame(f"frame of {length} bytes exceeds cap {MAX_FRAME}")
+    try:
+        return MsgType(mtype), length
+    except ValueError as e:
+        raise BadFrame(f"unknown message type {mtype}") from e
+
+
+def unpack_frame(buf: bytes) -> Tuple[MsgType, Any]:
+    """Parse one complete frame from a byte string (tests / in-memory
+    transports; sockets use ``transport.Channel`` which reads the header
+    and body incrementally)."""
+    mtype, length = parse_header(buf[:HEADER.size])
+    body = buf[HEADER.size:]
+    if len(body) < length:
+        raise TruncatedFrame(f"body has {len(body)} of {length} bytes")
+    return mtype, decode_payload(body[:length])

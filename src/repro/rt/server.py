@@ -1,0 +1,447 @@
+"""The CPSL server: owns the model state, drives clusters, drops stragglers.
+
+The server holds the SAME state dict ``CPSL.init_state`` builds (stacked
+device rows, server params, both optimizer states, step counter, rng)
+and executes the paper's first-parallel-then-sequential schedule against
+remote devices: per cluster it ships each member its device-row params
+(CLUSTER_START — the eq. 15 model distribution), collects the K smashed
+uploads, runs ONE server forward/backward + optimizer step on the
+concatenated batch (eqs. 5-6), returns per-slot cut-layer gradients, and
+after L local epochs collects the model uploads (eq. 23) and applies the
+jitted eq.-8 FedAvg — literally ``CPSL._fedavg``, the same compiled
+function the in-process reference uses.
+
+Straggler policy (per collection phase, every wait bounded):
+  * a device whose connection drops (reader EOF) is dead immediately;
+  * policy "drop": a device whose heartbeats go stale (``hb_timeout_s``)
+    is dropped without waiting for the phase deadline;
+  * everyone else gets until ``phase_timeout_s``, then is dropped for
+    THIS round (it may rejoin next round — mirroring the per-round
+    semantics of the simulated FedAvg straggler dropout).
+
+Dropped-device semantics mirror ``CPSL.fedavg_impl`` exactly: the eq.-8
+weight is zero and the stacked row holds its pre-cluster params (the
+``0 * x`` contribution is float-exact, pinned by the loopback tests).
+An epoch missing a smashed upload runs the masked server loss
+(``sample_weight`` zeros on the dead rows) — the unmasked path stays
+bit-exact because the masked variant is a separate jit cache entry that
+only an actual drop ever triggers.
+
+Retransmits are idempotent: GRADs and AGG_ACKs are cached per
+(round, cluster, epoch, device) and replayed on duplicate uploads;
+uploads the server no longer wants get an ERROR so the device stops
+retrying.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.rt import protocol as pr
+from repro.rt.device import member_batch_indices
+from repro.rt.protocol import MsgType
+from repro.rt.qos import QoSMonitor
+from repro.telemetry import TraceWriter
+
+
+class RTServer:
+    def __init__(self, cfg, cpsl, shards, labels, writer: TraceWriter):
+        """``cfg`` is the orchestrator's RTConfig (duck-typed: timeouts,
+        straggler policy, seed); ``cpsl`` a CPSL built with
+        ``fused_step=False``; ``shards``/``labels`` the server's copy of
+        the per-device index arrays and label array."""
+        import jax
+
+        self.cfg, self.cpsl = cfg, cpsl
+        self.shards, self.labels = shards, labels
+        self.writer = writer
+        self.qos = QoSMonitor(writer=writer, device=-1)
+        self._jax = jax
+
+        split = cpsl.split
+
+        def _server_phase(srv, srv_opt, step, smashed_flat, flat):
+            def srv_loss(s, sm):
+                loss, aux = split.server_loss(s, sm, flat)
+                return loss + aux, loss
+
+            (_, loss), (g_srv, g_smashed) = jax.value_and_grad(
+                srv_loss, argnums=(0, 1), has_aux=True)(srv, smashed_flat)
+            new_srv, new_opt = cpsl.srv_opt.step(g_srv, srv_opt, srv, step)
+            return new_srv, new_opt, g_smashed, loss
+
+        self._server_phase = jax.jit(_server_phase)
+
+        self.state = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
+        self._step = int(self.state["step"])
+
+        # connection registry
+        self.channels: Dict[int, object] = {}
+        self.inbox: "queue.Queue" = queue.Queue()
+        self.last_seen: Dict[int, float] = {}
+        self.dead: Set[int] = set()          # connection lost, permanent
+        self._grad_cache: Dict[tuple, dict] = {}
+        self._ack_cache: Set[tuple] = set()
+
+    # -- connections -----------------------------------------------------
+
+    def attach(self, gid: int, channel):
+        """Register a device channel and start its reader thread."""
+        self.channels[gid] = channel
+        self.last_seen[gid] = time.monotonic()
+
+        def reader():
+            while True:
+                try:
+                    mtype, payload = channel.recv(timeout=None)
+                except Exception:
+                    self.inbox.put((gid, None, None))
+                    return
+                self.inbox.put((gid, mtype, payload))
+
+        threading.Thread(target=reader, daemon=True).start()
+
+    def _send(self, gid: int, mtype: MsgType, payload):
+        if gid in self.dead:
+            return
+        try:
+            self.channels[gid].send(mtype, payload)
+        except (pr.ProtocolError, OSError):
+            self._mark_dead(gid)
+
+    def _mark_dead(self, gid: int):
+        if gid not in self.dead:
+            self.dead.add(gid)
+
+    # -- warmup ----------------------------------------------------------
+
+    def warmup(self):
+        """Compile the server jits (masked + unmasked phases, FedAvg) on
+        dummy data so measured round QoS excludes jit time. Pure
+        compilation: the returned states are discarded and
+        ``straggler_dropout`` is 0, so ``self.state`` is untouched."""
+        import jax.numpy as jnp
+        K = self.cpsl.ccfg.cluster_size
+        B = self.cpsl.ccfg.batch_per_device
+        sm = jnp.zeros(self.cpsl.split.smashed_spec(K * B).shape,
+                       jnp.float32)
+        lab = jnp.zeros((K * B,), jnp.int32)
+        st = self.state
+        for flat in ({"label": lab},
+                     {"label": lab,
+                      "sample_weight": jnp.ones((K * B,), jnp.float32)}):
+            self._jax.block_until_ready(self._server_phase(
+                st["srv"], st["srv_opt"], np.int32(0), sm, flat))
+        self._jax.block_until_ready(
+            self.cpsl.fedavg(st, np.ones((K,), np.float32)))
+
+    # -- message plumbing ------------------------------------------------
+
+    def _handle_stray(self, gid, mtype, payload, ctx):
+        """Anything that isn't the upload the current phase wants:
+        heartbeats update liveness, cached retransmits are replayed,
+        the rest is ERRORed so devices stop retrying."""
+        if mtype is None:
+            self._mark_dead(gid)
+            return
+        self.last_seen[gid] = time.monotonic()
+        if mtype in (MsgType.HEARTBEAT, MsgType.READY, MsgType.BYE):
+            return
+        if mtype == MsgType.SMASHED:
+            key = (payload.get("round"), payload.get("m"),
+                   payload.get("epoch"), gid)
+            cached = self._grad_cache.get(key)
+            if cached is not None:
+                self._send(gid, MsgType.GRAD, cached)
+                return
+        if mtype == MsgType.AGG:
+            if (payload.get("round"), payload.get("m"), gid) \
+                    in self._ack_cache:
+                self._send(gid, MsgType.AGG_ACK,
+                           {"round": payload["round"], "m": payload["m"]})
+                return
+            for rec in payload.get("qos") or []:
+                self.writer.emit(rec)       # salvage telemetry anyway
+        self._send(gid, MsgType.ERROR,
+                   {"reason": f"not expecting {mtype.name} ({ctx})"})
+
+    def _collect(self, want: Set[int], accept, ctx: str,
+                 on_accept=None) -> Dict[int, dict]:
+        """Wait for one upload per device in ``want``; every path is
+        deadline-bounded (see module docstring for the policy).
+        ``on_accept`` runs on first acceptance (e.g. immediate AGG_ACK,
+        so a device never waits on its cluster-mates' uploads);
+        duplicates of an upload already collected THIS phase are simply
+        ignored — the device keeps retrying until the phase's reply."""
+        cfg = self.cfg
+        got: Dict[int, dict] = {}
+
+        def handle(gid, mtype, payload):
+            if mtype is not None and gid in want \
+                    and accept(gid, mtype, payload):
+                self.last_seen[gid] = time.monotonic()
+                if gid not in got:
+                    got[gid] = payload
+                    if on_accept is not None:
+                        on_accept(gid, payload)
+            else:
+                self._handle_stray(gid, mtype, payload, ctx)
+
+        # Drain the backlog first: heartbeats queued while the server
+        # was busy (jit warmup, FedAvg, a previous cluster) must refresh
+        # liveness BEFORE the straggler filter below consults it —
+        # otherwise every device looks hb-stale at phase entry and the
+        # phase gives up without waiting at all.
+        while True:
+            try:
+                gid, mtype, payload = self.inbox.get_nowait()
+            except queue.Empty:
+                break
+            handle(gid, mtype, payload)
+
+        t0 = time.monotonic()
+        hard = t0 + cfg.phase_timeout_s
+        while True:
+            missing = want - set(got) - self.dead
+            if cfg.straggler_policy == "drop":
+                now = time.monotonic()
+                missing = {g for g in missing
+                           if now - self.last_seen[g] <= cfg.hb_timeout_s}
+            if not missing:
+                break
+            left = hard - time.monotonic()
+            if left <= 0:
+                break
+            try:
+                gid, mtype, payload = self.inbox.get(
+                    timeout=min(left, 0.1))
+            except queue.Empty:
+                continue
+            handle(gid, mtype, payload)
+        return got
+
+    def wait_ready(self, want: Set[int], timeout: float) -> Set[int]:
+        """Block until every registered device reports READY (post-jit
+        warmup); devices that never do are dead to the run."""
+        ready: Set[int] = set()
+        deadline = time.monotonic() + timeout
+        while want - ready - self.dead:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                break
+            try:
+                gid, mtype, payload = self.inbox.get(
+                    timeout=min(left, 0.25))
+            except queue.Empty:
+                continue
+            if mtype == MsgType.READY:
+                ready.add(gid)
+                self.last_seen[gid] = time.monotonic()
+            else:
+                self._handle_stray(gid, mtype, payload, "warmup")
+        for gid in want - ready - self.dead:
+            self._mark_dead(gid)
+        return ready
+
+    # -- the round -------------------------------------------------------
+
+    def _tree_row(self, tree, k: int):
+        return self._jax.tree.map(lambda t: np.asarray(t[k]), tree)
+
+    def _run_cluster(self, rnd: int, m: int, members: List[int],
+                     step0: int) -> List:
+        """One cluster's L local epochs + FedAvg. Returns the per-epoch
+        losses (device scalars)."""
+        import jax.numpy as jnp
+        jax = self._jax
+        cfg, cpsl = self.cfg, self.cpsl
+        K, B, L = len(members), cpsl.ccfg.batch_per_device, \
+            cpsl.ccfg.local_epochs
+        st = self.state
+        cluster_dead = {g for g in members if g in self.dead}
+
+        live0 = [g for g in members if g not in cluster_dead]
+        if not live0:
+            return []
+        for k, gid in enumerate(members):
+            if gid in cluster_dead:
+                continue
+            self._send(gid, MsgType.CLUSTER_START,
+                       {"round": rnd, "m": m, "k": k, "members": members,
+                        "step": step0,
+                        "dev": self._tree_row(st["dev"], k),
+                        "dev_opt": self._tree_row(st["dev_opt"], k)})
+
+        smash_shape = tuple(cpsl.split.smashed_spec(B).shape)
+        losses = []
+        for l in range(L):
+            phase_t0 = time.monotonic()
+            want = set(members) - cluster_dead
+
+            def accept(gid, mtype, p, l=l):
+                return (mtype == MsgType.SMASHED and p.get("round") == rnd
+                        and p.get("m") == m and p.get("epoch") == l)
+
+            got = self._collect(want, accept, f"r{rnd}m{m}l{l}")
+            for gid in want:
+                if gid in got:
+                    self.qos.emit(rnd, "upload",
+                                  time.monotonic() - phase_t0, device=gid,
+                                  cluster=m, epoch=l, ok=True,
+                                  attempt=got[gid].get("attempt"))
+                else:
+                    cluster_dead.add(gid)
+                    self.qos.emit(rnd, "upload",
+                                  time.monotonic() - phase_t0, device=gid,
+                                  cluster=m, epoch=l, ok=False)
+
+            if len(cluster_dead & set(members)) == K:
+                return losses    # nobody left: cluster contributes nothing
+
+            rows, weights, labels = [], [], []
+            picks = member_batch_indices(self.shards, members, B,
+                                         cfg.seed, rnd, m, l)
+            for k, gid in enumerate(members):
+                labels.append(self.labels[picks[k]])
+                if gid in got:
+                    rows.append(np.asarray(got[gid]["smashed"]))
+                    weights.append(np.ones((B,), np.float32))
+                else:
+                    rows.append(np.zeros(smash_shape, np.float32))
+                    weights.append(np.zeros((B,), np.float32))
+            smashed_flat = jnp.asarray(
+                np.concatenate(rows, axis=0))          # (K*B, ...)
+            flat = {"label": jnp.asarray(
+                np.concatenate(labels).astype(np.int32))}
+            if cluster_dead & set(members):
+                # masked loss ONLY after an actual drop — the unmasked
+                # trace is the bit-exact reference path
+                flat["sample_weight"] = jnp.asarray(np.concatenate(weights))
+
+            t0 = time.monotonic()
+            new_srv, new_opt, g_smashed, loss = self._server_phase(
+                st["srv"], st["srv_opt"], np.int32(step0 + l),
+                smashed_flat, flat)
+            jax.block_until_ready(loss)
+            self.qos.emit(rnd, "server", time.monotonic() - t0, cluster=m,
+                          epoch=l)
+            st = dict(st, srv=new_srv, srv_opt=new_opt)
+            self.state = st
+            losses.append(loss)
+
+            g = np.asarray(g_smashed).reshape((K,) + smash_shape)
+            for k, gid in enumerate(members):
+                if gid in cluster_dead:
+                    continue
+                payload = {"round": rnd, "m": m, "epoch": l, "g": g[k]}
+                self._grad_cache[(rnd, m, l, gid)] = payload
+                self._send(gid, MsgType.GRAD, payload)
+
+        # -- model upload + eq. 8 ----------------------------------------
+        want = set(members) - cluster_dead
+
+        def accept_agg(gid, mtype, p):
+            return (mtype == MsgType.AGG and p.get("round") == rnd
+                    and p.get("m") == m)
+
+        agg_t0 = time.monotonic()
+
+        def on_agg(gid, p):
+            # ack on arrival: the device must not wait on cluster-mates
+            self._ack_cache.add((rnd, m, gid))
+            self._send(gid, MsgType.AGG_ACK, {"round": rnd, "m": m})
+            for rec in p.get("qos") or []:
+                self.writer.emit(rec)
+            self.qos.emit(rnd, "model_up", time.monotonic() - agg_t0,
+                          device=gid, cluster=m, ok=True)
+
+        got = self._collect(want, accept_agg, f"r{rnd}m{m}agg", on_agg)
+        for gid in want - set(got):
+            cluster_dead.add(gid)
+            self.qos.emit(rnd, "model_up", time.monotonic() - agg_t0,
+                          device=gid, cluster=m, ok=False)
+
+        dev_rows, opt_rows, w = [], [], []
+        for k, gid in enumerate(members):
+            if gid in got:
+                dev_rows.append(got[gid]["dev"])
+                opt_rows.append(got[gid]["dev_opt"])
+                w.append(float(len(self.shards[gid])))
+            else:
+                # pre-cluster row + zero eq.-8 weight: the 0*x
+                # contribution is float-exact (CPSL.fedavg_impl)
+                dev_rows.append(self._tree_row(st["dev"], k))
+                opt_rows.append(self._tree_row(st["dev_opt"], k))
+                w.append(0.0)
+        st = dict(st,
+                  dev=jax.tree.map(lambda *ts: jnp.stack(
+                      [jnp.asarray(t) for t in ts]), *dev_rows),
+                  dev_opt=jax.tree.map(lambda *ts: jnp.stack(
+                      [jnp.asarray(t) for t in ts]), *opt_rows))
+        if any(x > 0 for x in w):
+            st = self.cpsl.fedavg(st, np.asarray(w, np.float32))
+        self.state = st
+        self._round_dropped.update(cluster_dead - self.dead)
+        self._round_dropped.update(set(members) & self.dead)
+        return losses
+
+    def run_round(self, rnd: int, plan, net=None) -> dict:
+        """Execute one CPSL round over the plan's clusters (sequentially,
+        eq. 9) and emit the trace record. Returns round metrics."""
+        import jax.numpy as jnp
+        t0 = time.monotonic()
+        self._round_dropped: Set[int] = set()
+        self._grad_cache.clear()
+        losses = []
+        L = self.cpsl.ccfg.local_epochs
+        clusters_global = plan.global_clusters()
+        for m, members in enumerate(clusters_global):
+            step0 = self._step
+            losses += self._run_cluster(rnd, m, members, step0)
+            self._step = step0 + L
+        self.state = dict(self.state,
+                          step=jnp.asarray(self._step, jnp.int32))
+
+        wall = time.monotonic() - t0
+        loss = (float(jnp.mean(jnp.stack(losses))) if losses else None)
+        dropped = sorted(self._round_dropped)
+        rec = {"round": rnd, "v": plan.v, "stale": plan.stale,
+               "n_active": len(plan.ids) - len(self.dead),
+               "ids": plan.ids,
+               "clusters": [list(c) for c in plan.clusters],
+               "clusters_global": clusters_global,
+               "xs": [np.asarray(x) for x in plan.xs],
+               "planned_latency_s": plan.latency,
+               "wall_s": wall, "dropped": dropped, "source": "rt"}
+        if net is not None:
+            rec["f"], rec["rate"] = net.f, net.rate
+            rec["latency_s"] = plan.latency
+        if loss is not None:
+            rec["loss"] = loss
+        self.writer.emit(rec)
+        self.qos.emit(rnd, "round", wall)
+        return {"loss": loss, "dropped": dropped, "wall_s": wall}
+
+    # -- teardown --------------------------------------------------------
+
+    def shutdown(self, linger_s: float = 3.0):
+        for gid in list(self.channels):
+            self._send(gid, MsgType.SHUTDOWN, {})
+        deadline = time.monotonic() + linger_s
+        bye = set()
+        while len(bye) < len(self.channels) - len(self.dead):
+            left = deadline - time.monotonic()
+            if left <= 0:
+                break
+            try:
+                gid, mtype, _ = self.inbox.get(timeout=min(left, 0.25))
+            except queue.Empty:
+                continue
+            if mtype == MsgType.BYE:
+                bye.add(gid)
+        for ch in self.channels.values():
+            ch.close()

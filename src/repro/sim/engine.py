@@ -26,7 +26,6 @@ Each round (== one small-timescale slot):
 """
 from __future__ import annotations
 
-import json
 from typing import Callable, List, Optional
 
 import jax
@@ -42,22 +41,11 @@ from repro.core.splitting import make_split_model
 from repro.data.pipeline import DeviceResidentDataset, batch_seed
 from repro.sim.controller import Plan, TwoTimescaleController
 from repro.sim.dynamics import DynamicsCfg, NetworkProcess
+from repro.telemetry import TraceWriter, jsonable
 
-
-def _jsonable(o):
-    if isinstance(o, (np.integer,)):
-        return int(o)
-    if isinstance(o, (np.floating,)):
-        return float(o)
-    if isinstance(o, np.ndarray):
-        return o.tolist()
-    if hasattr(o, "__array__") and not isinstance(o, (str, bytes)):
-        return _jsonable(np.asarray(o))   # jax arrays etc.
-    if isinstance(o, (list, tuple)):
-        return [_jsonable(x) for x in o]
-    if isinstance(o, dict):
-        return {k: _jsonable(v) for k, v in o.items()}
-    return o
+# the JSONL record schema lives in repro.telemetry now, shared with the
+# rt deployment runtime's QoS traces; alias kept for older callers
+_jsonable = jsonable
 
 
 def device_round_energy(plan: Plan, net, ncfg: NetworkCfg, prof: CutProfile,
@@ -112,6 +100,7 @@ class SimEngine:
         self.controller = TwoTimescaleController(
             prof, ncfg, ccfg.batch_per_device, ccfg.local_epochs, scfg)
         self.trace: List[dict] = []
+        self._writer = TraceWriter(None)
         self._n_shards = (n_data_shards
                           or len(getattr(dataset, "device_indices", []))
                           or None)
@@ -151,9 +140,7 @@ class SimEngine:
 
     def _emit(self, rec: dict):
         self.trace.append(rec)
-        if self.scfg.trace_path:
-            with open(self.scfg.trace_path, "a") as f:
-                f.write(json.dumps(_jsonable(rec)) + "\n")
+        self._writer.emit(rec)
 
     # -- main loop ------------------------------------------------------------
 
@@ -162,8 +149,7 @@ class SimEngine:
         # fresh trace per run — carrying over records (in memory or on
         # disk) would interleave stale rounds into downstream recomputation
         self.trace = []
-        if self.scfg.trace_path:
-            open(self.scfg.trace_path, "w").close()
+        self._writer = TraceWriter(self.scfg.trace_path, fresh=True)
         cpsl = None
         state = None
         sim_time = 0.0
@@ -277,7 +263,9 @@ def recompute_trace_latencies(trace, prof: CutProfile, ncfg: NetworkCfg,
         return recompute_fleet_latencies(trace, prof, ncfg, B, L)
     out = []
     for rec in trace:
-        if rec.get("skipped"):
+        # skipped rounds recompute to nothing; records without a network
+        # snapshot (e.g. interleaved rt QoS records) are not rounds
+        if rec.get("skipped") or "v" not in rec:
             continue
         net = NetworkState(f=np.asarray(rec["f"], dtype=np.float64),
                            rate=np.asarray(rec["rate"], dtype=np.float64))

@@ -1,0 +1,153 @@
+"""Shared JSONL trace-record schema for simulation AND deployment traces.
+
+One schema, two producers: ``sim.engine.SimEngine`` emits per-round
+records of the *simulated* run (predicted wireless latency, planned
+clusters, network snapshot), and the ``repro.rt`` runtime emits the same
+round records for *executed* rounds (measured wall-clock in ``wall_s``)
+plus per-device ``QoSRecord`` phase timings. Because both carry the
+``v / clusters / xs / f / rate`` snapshot keys,
+``sim.engine.recompute_trace_latencies`` prices either trace with the
+eq. 15-25 cost model — which is what lets ``rt.crossval`` put measured
+and predicted round latency side by side on the identical scenario.
+
+Records are plain dicts on the wire (JSONL); the dataclasses here are
+the typed view — ``from_dict`` parses any producer's record (unknown
+keys land in ``extras``), and ``to_dict`` emits exactly the non-None
+fields, so parse -> emit is the identity on schema-conforming records
+(tests/test_telemetry.py pins the roundtrip).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Union
+
+import numpy as np
+
+
+def jsonable(o):
+    """Recursively convert numpy / jax leaves to JSON-serializable
+    builtins (moved here from ``sim.engine._jsonable``)."""
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if hasattr(o, "__array__") and not isinstance(o, (str, bytes)):
+        return jsonable(np.asarray(o))   # jax arrays etc.
+    if isinstance(o, (list, tuple)):
+        return [jsonable(x) for x in o]
+    if isinstance(o, dict):
+        return {k: jsonable(v) for k, v in o.items()}
+    return o
+
+
+def _field_names(cls) -> set:
+    return {f.name for f in dataclasses.fields(cls)} - {"extras"}
+
+
+class _Record:
+    """to_dict/from_dict shared by the record dataclasses: emit declared
+    non-None fields in order, park unknown keys in ``extras``."""
+
+    def to_dict(self) -> dict:
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name == "extras":
+                continue
+            v = getattr(self, f.name)
+            if v is not None:
+                out[f.name] = v
+        out.update(self.extras)
+        return jsonable(out)
+
+    @classmethod
+    def from_dict(cls, d: dict):
+        known = _field_names(cls)
+        kw = {k: v for k, v in d.items() if k in known}
+        extras = {k: v for k, v in d.items() if k not in known}
+        return cls(**kw, extras=extras)
+
+
+@dataclass
+class RoundRecord(_Record):
+    """One executed (or skipped) round. ``latency_s`` is the cost-model
+    *prediction* (sim producer); ``wall_s`` is the *measured* wall-clock
+    (rt producer) — a record may carry either or both. ``clusters`` are
+    local indices into the ``f``/``rate`` snapshot arrays, which is the
+    layout ``recompute_trace_latencies`` reprices."""
+    round: int
+    skipped: Optional[str] = None
+    v: Optional[int] = None
+    stale: Optional[bool] = None
+    n_active: Optional[int] = None
+    ids: Optional[Any] = None
+    f: Optional[Any] = None
+    rate: Optional[Any] = None
+    clusters: Optional[Any] = None
+    clusters_global: Optional[Any] = None
+    xs: Optional[Any] = None
+    planned_latency_s: Optional[float] = None
+    latency_s: Optional[float] = None
+    sim_time_s: Optional[float] = None
+    wall_s: Optional[float] = None
+    cut_means: Optional[Any] = None
+    loss: Optional[float] = None
+    eval: Optional[Any] = None
+    dropped: Optional[List[int]] = None
+    source: Optional[str] = None          # "sim" | "rt"
+    events: Optional[List[dict]] = None
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class QoSRecord(_Record):
+    """One measured phase on one device (rt producer). ``phase`` is one
+    of fwd | upload | grad_wait | bwd | model_up | server | round;
+    ``device`` is the global device id (-1 = the server itself)."""
+    round: int
+    device: int
+    phase: str
+    t_s: float
+    kind: str = "qos"
+    cluster: Optional[int] = None
+    epoch: Optional[int] = None
+    slot: Optional[int] = None
+    attempt: Optional[int] = None
+    bytes: Optional[int] = None
+    ok: Optional[bool] = None
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+
+def parse_record(d: dict) -> Union[RoundRecord, QoSRecord]:
+    """Typed view of a trace line from either producer."""
+    if d.get("kind") == "qos":
+        return QoSRecord.from_dict(d)
+    return RoundRecord.from_dict(d)
+
+
+class TraceWriter:
+    """Append-only JSONL sink + in-memory record list. ``path=None``
+    keeps records in memory only; ``fresh=True`` truncates an existing
+    file (stale rounds would interleave into downstream recompute)."""
+
+    def __init__(self, path: Optional[str] = None, fresh: bool = True):
+        self.path = path
+        self.records: List[dict] = []
+        if path and fresh:
+            open(path, "w").close()
+
+    def emit(self, rec) -> dict:
+        d = rec.to_dict() if isinstance(rec, _Record) else jsonable(rec)
+        self.records.append(d)
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(d) + "\n")
+        return d
+
+
+def load_trace(path: str) -> List[dict]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]

@@ -26,8 +26,6 @@ from __future__ import annotations
 import copy
 import dataclasses
 import json
-import os
-import signal
 import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional
@@ -48,6 +46,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import (DeviceResidentDataset, batch_seed,
                                  fleet_plan)
 from repro.data.synthetic import non_iid_split
+from repro.lifecycle import GracefulStop
 from repro.sim.batched import gibbs_clustering_multichain
 
 
@@ -101,14 +100,13 @@ class CPSLTrainer:
             if cpsl.ccfg.fused_round else None)
         self.history: List[dict] = []
         self._pending: List[dict] = []
-        self._stop = False
-        try:
-            signal.signal(signal.SIGTERM, self._sigterm)
-        except ValueError:
-            pass  # not main thread
+        # SIGTERM => finish the round, checkpoint (blocking), exit clean
+        # (preemption-safe; shared with the rt device workers)
+        self.stop = GracefulStop().install()
 
-    def _sigterm(self, *_):
-        self._stop = True
+    @property
+    def _stop(self) -> bool:
+        return self.stop.triggered
 
     # -- round-level resource management (paper small timescale) -------------
 

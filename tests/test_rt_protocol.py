@@ -1,0 +1,125 @@
+"""Wire-format tests: exact payload roundtrips (dtypes, shapes, pytree
+structure, compressed uploads) and framing error paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import compress
+from repro.core.splitting import make_split_model
+from repro.rt import protocol as pr
+from repro.rt.protocol import MsgType
+
+
+def roundtrip(obj):
+    return pr.decode_payload(pr.encode_payload(obj))
+
+
+def assert_tree_exact(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert np.array_equal(x, y)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "float64", "int32", "int64",
+                                   "uint8", "bool"])
+@pytest.mark.parametrize("shape", [(), (3,), (2, 3, 4)])
+def test_array_roundtrip_exact(dtype, shape):
+    rng = np.random.default_rng(0)
+    a = (rng.random(shape) * 100).astype(dtype)
+    b = roundtrip({"a": a})["a"]
+    assert b.dtype == a.dtype and b.shape == a.shape
+    assert np.array_equal(b, a)
+
+
+def test_float_roundtrip_is_bitwise():
+    """Raw tobytes/frombuffer: NaNs, infs, denormals all survive."""
+    a = np.array([np.nan, np.inf, -np.inf, 5e-324, -0.0, 1/3], np.float64)
+    b = roundtrip(a)
+    assert np.array_equal(a.view(np.uint64), b.view(np.uint64))
+
+
+def test_bfloat16_extension_dtype():
+    a = jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3) / 7
+    b = roundtrip(a)
+    assert b.dtype == np.asarray(a).dtype          # ml_dtypes bfloat16
+    assert np.array_equal(np.asarray(a), b)
+
+
+def test_jax_arrays_and_np_scalars_materialize():
+    out = roundtrip({"j": jnp.ones((2, 2), jnp.float32),
+                     "s": np.int32(7)})
+    assert isinstance(out["j"], np.ndarray) and out["j"].shape == (2, 2)
+    assert out["s"].dtype == np.int32 and int(out["s"]) == 7
+
+
+def test_tuple_structure_survives():
+    """msgpack would turn tuples into lists; optimizer states are tuples
+    (sgd's is the EMPTY tuple) and pytree structure must survive."""
+    obj = {"empty": (), "nested": (1, (2.5, "x")), "lst": [1, (2,)]}
+    out = roundtrip(obj)
+    assert out["empty"] == () and isinstance(out["empty"], tuple)
+    assert out["nested"] == (1, (2.5, "x"))
+    assert isinstance(out["nested"][1], tuple)
+    assert isinstance(out["lst"], list) and out["lst"][1] == (2,)
+
+
+def test_device_params_roundtrip_exact():
+    """The actual payload of CLUSTER_START/AGG: lenet device params."""
+    split = make_split_model("lenet", 3)
+    dev = split.init_device(jax.random.PRNGKey(0))
+    assert_tree_exact(dev, roundtrip(dev))
+
+
+@pytest.mark.parametrize("method", ["topk", "int8"])
+def test_compressed_upload_roundtrip_exact(method):
+    """Compressed device-model deltas (core.compression) ship exactly:
+    top-k sparsified and int8-dequantized trees are still f32 arrays and
+    must cross the wire bit-identical."""
+    split = make_split_model("lenet", 2)
+    dev = split.init_device(jax.random.PRNGKey(1))
+    delta = compress(dev, method, 0.25)
+    assert_tree_exact(delta, roundtrip(delta))
+
+
+def test_frame_roundtrip():
+    mtype, payload = pr.unpack_frame(
+        pr.frame(MsgType.GRAD, {"g": np.zeros((4, 2), np.float32),
+                                "round": 3}))
+    assert mtype == MsgType.GRAD and payload["round"] == 3
+
+
+def test_truncated_header_and_body():
+    buf = pr.frame(MsgType.SMASHED, {"x": np.arange(10)})
+    with pytest.raises(pr.TruncatedFrame):
+        pr.parse_header(buf[:4])
+    with pytest.raises(pr.TruncatedFrame):
+        pr.unpack_frame(buf[:-3])
+
+
+def test_version_and_magic_mismatch():
+    buf = bytearray(pr.frame(MsgType.PLAN, {}))
+    bad_ver = bytes(buf[:1]) + bytes([pr.VERSION + 1]) + bytes(buf[2:])
+    with pytest.raises(pr.VersionMismatch):
+        pr.parse_header(bad_ver[:pr.HEADER.size])
+    bad_magic = bytes([0x00]) + bytes(buf[1:])
+    with pytest.raises(pr.VersionMismatch):
+        pr.parse_header(bad_magic[:pr.HEADER.size])
+
+
+def test_unknown_msg_type_and_oversize():
+    hdr = pr.HEADER.pack(pr.MAGIC, pr.VERSION, 200, 0)
+    with pytest.raises(pr.BadFrame):
+        pr.parse_header(hdr)
+    hdr = pr.HEADER.pack(pr.MAGIC, pr.VERSION, int(MsgType.PLAN),
+                         pr.MAX_FRAME + 1)
+    with pytest.raises(pr.BadFrame):
+        pr.parse_header(hdr)
+
+
+def test_malformed_payload_is_bad_frame():
+    with pytest.raises(pr.BadFrame):
+        pr.decode_payload(b"\xc1\xc1\xc1")   # invalid msgpack

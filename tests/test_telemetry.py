@@ -1,0 +1,95 @@
+"""Trace-schema tests: parse -> emit roundtrip identity, producer
+dispatch, writer/loader, and compatibility of rt traces with the sim
+repricer."""
+import numpy as np
+
+from repro.core.channel import NetworkCfg
+from repro.core.profile import lenet_profile
+from repro.sim.engine import recompute_trace_latencies
+from repro.telemetry import (QoSRecord, RoundRecord, TraceWriter, jsonable,
+                             load_trace, parse_record)
+
+
+def _round_dict():
+    return {"round": 2, "v": 3, "stale": False, "n_active": 4,
+            "ids": [0, 1, 2, 3], "f": [1e9, 2e9], "rate": [1e6, 2e6],
+            "clusters": [[0, 1], [2, 3]], "xs": [[2, 2], [2, 2]],
+            "planned_latency_s": 1.5, "wall_s": 0.2, "loss": 2.1,
+            "dropped": [], "source": "rt"}
+
+
+def test_round_record_roundtrip_identity():
+    d = _round_dict()
+    rec = parse_record(d)
+    assert isinstance(rec, RoundRecord)
+    assert rec.to_dict() == d
+    # and again: to_dict -> from_dict -> to_dict is stable
+    assert parse_record(rec.to_dict()).to_dict() == d
+
+
+def test_qos_record_roundtrip_and_dispatch():
+    d = {"round": 1, "device": 3, "phase": "upload", "t_s": 0.01,
+         "kind": "qos", "cluster": 0, "epoch": 2, "ok": True}
+    rec = parse_record(d)
+    assert isinstance(rec, QoSRecord)
+    assert rec.to_dict() == d
+
+
+def test_unknown_keys_land_in_extras_and_survive():
+    d = dict(_round_dict(), custom_key={"a": 1})
+    rec = parse_record(d)
+    assert rec.extras == {"custom_key": {"a": 1}}
+    assert rec.to_dict() == d
+
+
+def test_none_fields_are_omitted():
+    rec = RoundRecord(round=0, skipped="empty")
+    d = rec.to_dict()
+    assert d == {"round": 0, "skipped": "empty"}
+
+
+def test_jsonable_numpy_and_nested():
+    out = jsonable({"a": np.int64(3), "b": np.float32(0.5),
+                    "c": np.arange(3), "d": (np.ones(2), "s")})
+    assert out == {"a": 3, "b": 0.5, "c": [0, 1, 2], "d": [[1.0, 1.0], "s"]}
+    assert isinstance(out["a"], int) and isinstance(out["b"], float)
+
+
+def test_writer_appends_and_loads(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    w = TraceWriter(path, fresh=True)
+    w.emit(RoundRecord(round=0, wall_s=0.1))
+    w.emit({"round": 0, "device": 1, "phase": "fwd", "t_s": 0.01,
+            "kind": "qos", "np": np.float64(2.0)})
+    lines = load_trace(path)
+    assert lines == w.records and len(lines) == 2
+    assert lines[1]["np"] == 2.0          # jsonable applied to raw dicts
+    # fresh=True truncates
+    TraceWriter(path, fresh=True)
+    assert load_trace(path) == []
+
+
+def test_memory_only_writer():
+    w = TraceWriter(None)
+    w.emit(RoundRecord(round=1))
+    assert w.records == [{"round": 1}]
+
+
+def test_repricer_skips_qos_and_skipped_records():
+    """An rt trace (round records + interleaved QoS lines + a skipped
+    round) reprices exactly its executable rounds."""
+    ncfg = NetworkCfg(n_devices=2, n_subcarriers=4)
+    prof = lenet_profile()
+    trace = [
+        {"round": 0, "v": 2, "clusters": [[0, 1]], "xs": [[2.0, 2.0]],
+         "f": [1e9, 2e9], "rate": [1e6, 2e6], "wall_s": 0.5,
+         "source": "rt"},
+        {"round": 0, "device": 0, "phase": "fwd", "t_s": 0.1,
+         "kind": "qos"},
+        {"round": 1, "skipped": "empty"},
+        {"round": 2, "v": 2, "clusters": [[0, 1]], "xs": [[2.0, 2.0]],
+         "f": [1e9, 2e9], "rate": [1e6, 2e6], "wall_s": 0.4,
+         "source": "rt"},
+    ]
+    lats = recompute_trace_latencies(trace, prof, ncfg, B=8, L=1)
+    assert lats.shape == (2,) and (lats > 0).all()
