@@ -4,22 +4,32 @@ host path (per-episode NumPy loop over slots with the eq. 15-25 pricing
 and the PR-1 vectorized greedy Alg. 3 — decision-identical by
 construction).
 
-Scenario: an E-seed grid of Gauss-Markov episodes (rho_snr=0.9,
-rho_f=0.95) with forced churn and per-device energy budgets, greedy
-spectrum at the paper's N=30 / C=30 / K=5 configuration. Both arms
-produce the same deliverable — per-episode per-round latency traces —
-and the bench asserts they agree to tight float64 tolerance with
-identical clustering/allocation decisions before talking about speed.
+Two cases:
+
+  * benchmark arms — an E-seed grid of Gauss-Markov episodes
+    (rho_snr=0.9, rho_f=0.95) with forced churn and per-device energy
+    budgets, greedy/equal spectrum at the paper's N=30 / C=30 / K=5
+    configuration;
+  * the PROPOSED arm — the full two-timescale controller (Gibbs +
+    greedy every slot, SAA cut re-selection every epoch) under
+    stochastic Bernoulli churn with the ``min_devices`` floor and
+    in-slot repair, priced in-jit vs the looped host
+    ``TwoTimescaleController``/reference on shared pre-drawn draws.
+
+Both arms of each case produce the same deliverable — per-episode
+per-round latency traces — and the bench asserts they agree to tight
+float64 tolerance with identical decisions before talking about speed.
 
 Asserts:
   * end-to-end wall-clock speedup >= ``SIMFLEET_MIN_SPEEDUP`` (default
-    3) on the 8-episode grid — the fleet arm pays its (T-independent,
+    3) on each case's grid — the fleet arm pays its (T-independent,
     lax.scan) compile inside the measurement; a steady-state re-dispatch
     is reported separately;
   * per-round latencies: fleet vs looped reference <= 1e-9 relative;
   * the NumPy oracle: ``recompute_trace_latencies`` re-derivation from
     the traced (f, rate, clusters, xs, v) matches the jnp engine;
-  * every greedy/equal allocation sums to exactly the C budget.
+  * identical cut / cluster / allocation decisions per round, and every
+    allocation sums to exactly the C budget.
 
 Writes JSON to ``--out`` / ``$SIMFLEET_BENCH_JSON`` (default
 /tmp/bench_simfleet.json) — CI uploads it as an artifact:
@@ -57,6 +67,82 @@ def _runner(seeds, rounds, policies):
                        policies=policies, cluster_sizes=(K,), cuts=(CUT,),
                        batch_per_device=B, local_epochs=L)
     return SimFleetRunner(prof, ncfg, dcfg, fcfg), prof, ncfg
+
+
+def _runner_proposed(seeds, rounds):
+    prof = lenet_profile()
+    ncfg = NetworkCfg(n_devices=N, n_subcarriers=C)
+    dcfg = DynamicsCfg(rho_snr=0.9, rho_f=0.95, seed=0, p_depart=0.02,
+                       p_arrive=0.1, min_devices=4, energy_budget_j=400.0)
+    fcfg = SimFleetCfg(rounds=rounds, seeds=tuple(range(seeds)),
+                       policies=("proposed",), cluster_sizes=(K,),
+                       cuts=(CUT,), batch_per_device=B, local_epochs=L,
+                       epoch_len=10, gibbs_iters=25, gibbs_chains=1,
+                       saa_samples=2, saa_gibbs_iters=12,
+                       saa_cuts=(1, 2, 3), n_reserve=2,
+                       min_devices_floor=True)
+    return SimFleetRunner(prof, ncfg, dcfg, fcfg), prof, ncfg
+
+
+def bench_proposed(seeds, rounds, result):
+    runner, prof, ncfg = _runner_proposed(seeds, rounds)
+    E, T = runner.E, runner.T
+    print(f"proposed arm: E={E} seeds x T={rounds} slots, N={N} C={C} "
+          f"K={K}, SAA cuts (1,2,3) every 10 slots, Gibbs 25 iters/slot, "
+          f"Bernoulli churn + floor + energy:")
+
+    t0 = time.monotonic()
+    res = runner.run()
+    first = time.monotonic() - t0
+    t0 = time.monotonic()
+    runner.run()
+    steady = time.monotonic() - t0
+
+    ref = runner.run_looped()
+    looped = ref["wall_s"]
+
+    lat, rlat = res["trace"]["latency"], ref["latency"]
+    scale = np.maximum(np.abs(rlat), 1e-30)
+    err_ref = float(np.max(np.abs(lat - rlat) / scale))
+    assert err_ref < 1e-9, f"fleet diverged from looped host: {err_ref}"
+    want = recompute_trace_latencies(res, prof, ncfg, B, L)
+    err_oracle = float(np.max(np.abs(lat - want)
+                              / np.maximum(np.abs(want), 1e-30)))
+    assert err_oracle < 1e-12, f"oracle recompute error {err_oracle}"
+    for e in range(E):                       # identical decisions
+        recs = fleet_trace_records(res, e)
+        for t in range(T):
+            assert recs[t]["v"] == ref["records"][e][t]["v"], (e, t)
+            assert recs[t]["clusters"] == ref["records"][e][t]["clusters"]
+            for a, b in zip(recs[t]["xs"], ref["records"][e][t]["xs"]):
+                assert np.array_equal(a, b), (e, t)
+    xs, mask = res["trace"]["xs"], res["trace"]["mask"]
+    sums = np.where(mask, xs, 0).sum(axis=-1)
+    assert (sums[res["trace"]["csize"] > 0] == C).all(), "budget violated"
+
+    speedup = looped / first
+    print(f"  looped host controller: {looped:7.2f}s")
+    print(f"  fleet (one dispatch):   {first:7.2f}s "
+          f"(steady re-dispatch {steady:.2f}s, "
+          f"compile ~{max(first - steady, 0.0):.2f}s)")
+    print(f"  end-to-end speedup:     {speedup:5.2f}x "
+          f"(steady {looped / steady:.1f}x)")
+    print(f"  equivalence: latency vs looped {err_ref:.2e}, vs NumPy "
+          f"oracle {err_oracle:.2e}, cut/cluster/allocation decisions "
+          f"identical")
+    floor = float(os.environ.get("SIMFLEET_MIN_SPEEDUP", "3"))
+    assert speedup >= floor, \
+        f"proposed-arm fleet speedup {speedup:.2f}x < {floor:g}x"
+    result["simfleet_proposed"] = {
+        "episodes": E, "rounds": T,
+        "config": {"n_devices": N, "n_subcarriers": C, "cluster_size": K,
+                   "saa_cuts": [1, 2, 3], "epoch_len": 10,
+                   "gibbs_iters": 25, "batch": B, "local_epochs": L},
+        "looped_s": looped, "fleet_first_call_s": first,
+        "fleet_steady_s": steady, "speedup": speedup,
+        "steady_speedup": looped / steady,
+        "max_rel_err_vs_looped": err_ref,
+        "max_rel_err_vs_oracle": err_oracle}
 
 
 def bench(seeds, rounds, policies, result):
@@ -120,12 +206,17 @@ def bench(seeds, rounds, policies, result):
 
 
 def main(quick=True, seeds=8, rounds=None, policies=("greedy", "equal"),
-         out=None):
+         out=None, proposed_rounds=None):
     out = out or os.environ.get("SIMFLEET_BENCH_JSON",
                                 "/tmp/bench_simfleet.json")
     rounds = rounds or (150 if quick else 400)
+    # the proposed arm's host baseline loops real Gibbs chains per slot,
+    # so its grid is shorter than the cheap benchmark arms' by default
+    proposed_rounds = proposed_rounds or min(rounds, 60 if quick else 120)
     result = {"quick": quick}
     bench(seeds, rounds, tuple(policies), result)
+    print()
+    bench_proposed(seeds, proposed_rounds, result)
     with open(out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"results -> {out}")
@@ -142,6 +233,10 @@ if __name__ == "__main__":
     ap.add_argument("--policies", default="greedy,equal",
                     help="comma-separated: greedy,equal")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--proposed-rounds", type=int, default=None,
+                    help="slots for the proposed-arm case (default: "
+                         "min(rounds, 60 quick / 120 full))")
     args = ap.parse_args()
     main(quick=not args.full, seeds=args.seeds, rounds=args.rounds,
-         policies=tuple(args.policies.split(",")), out=args.out)
+         policies=tuple(args.policies.split(",")), out=args.out,
+         proposed_rounds=args.proposed_rounds)

@@ -2,14 +2,16 @@
 (b) per-round latency of the proposed joint clustering+spectrum algorithm
 vs heuristic (similar-compute) and random clustering, across bandwidths.
 
-Part (b) is rewired onto ``repro.sim.fleet``: per bandwidth, the
-heuristic arm (sort-by-compute layout, equal split) and the random arm
-(random-permutation layout, equal split) are priced as episode fleets in
-one dispatch each, on the SAME realized network draws (shared seeds /
-innovation streams); the proposed arm then runs host Gibbs (Alg. 4) on
-exactly those draws, extracted from the fleet trace — so the three arms
-are common-random-number coupled draw by draw. (Gibbs inside the jit is
-a ROADMAP open item; the host planner remains the reference.)"""
+Part (b) runs entirely inside ``repro.sim.fleet``: per bandwidth, ALL
+THREE arms — heuristic (sort-by-compute layout, equal split), random
+(random-permutation layout, equal split) and PROPOSED (in-jit Gibbs +
+greedy, Alg. 3/4) — are priced as one episode fleet in ONE jitted
+dispatch, via ``policy_overrides`` over a triplicated seed axis. The
+duplicated seeds share innovation streams, so the three arms are
+common-random-number coupled draw by draw. ``run_fig8b_smoke`` is the
+CI entry: a tiny three-arm fleet cross-checked against the looped host
+reference (``run_looped``, with the host ``TwoTimescaleController``
+mirror for the proposed rows), emitting a JSON artifact."""
 from __future__ import annotations
 
 import numpy as np
@@ -18,42 +20,50 @@ from benchmarks import bench_common as bc
 from repro.configs.base import SimFleetCfg
 from repro.core import profile as pf
 from repro.core import resource as rs
-from repro.core.channel import NetworkCfg, NetworkState, device_means, \
-    sample_network
+from repro.core.channel import NetworkCfg, device_means, sample_network
 from repro.sim.dynamics import DynamicsCfg
 from repro.sim.fleet import LAYOUT_COMPUTE, SimFleetRunner
 
 
-def _baseline_fleets(ncfg_b, prof, n_draws, iters):
-    """Heuristic + random equal-split arms for one bandwidth as ONE
-    fleet (episodes 0..n-1 heuristic, n..2n-1 random; the duplicated
-    seed axis gives both arms the same per-draw network realizations);
-    the proposed arm reuses the realized draws from the trace."""
-    fcfg = SimFleetCfg(rounds=1, seeds=tuple(range(n_draws)) * 2,
-                       policies=("equal",), cluster_sizes=(5,), cuts=(1,),
-                       batch_per_device=16, local_epochs=1, mean_seed=0)
+def _three_arm_fleet(ncfg_b, prof, n_draws, iters, rounds=1,
+                     cluster_size=5):
+    """All three fig. 8(b) arms for one bandwidth as ONE fleet:
+    episodes 0..n-1 heuristic (compute-sorted layout, equal split),
+    n..2n-1 random (random-permutation layout, equal split), 2n..3n-1
+    PROPOSED (in-jit Gibbs + greedy). The triplicated seed axis gives
+    every arm the same per-draw network realizations."""
+    fcfg = SimFleetCfg(rounds=rounds, seeds=tuple(range(n_draws)) * 3,
+                       policies=("equal",), cluster_sizes=(cluster_size,),
+                       cuts=(1,), batch_per_device=16, local_epochs=1,
+                       mean_seed=0, gibbs_iters=iters, gibbs_chains=1)
     dcfg = DynamicsCfg(rho_snr=0.0, rho_f=0.0, seed=1)
     rng = np.random.default_rng(0)
     runner = SimFleetRunner(
         prof, ncfg_b, dcfg, fcfg,
-        layout_modes=[LAYOUT_COMPUTE] * n_draws + [0] * n_draws,
+        layout_modes=[LAYOUT_COMPUTE] * n_draws + [0] * (2 * n_draws),
         perms={s: rng.permutation(ncfg_b.n_devices)
-               for s in range(n_draws)})
+               for s in range(n_draws)},
+        policy_overrides=["equal"] * (2 * n_draws)
+                         + ["proposed"] * n_draws)
     res = runner.run()
-
-    lat_g = lat_h = lat_r = 0.0
     for d in range(n_draws):
         # identical draws by construction (same-seed episodes)
         np.testing.assert_array_equal(res["trace"]["f"][d, 0],
                                       res["trace"]["f"][n_draws + d, 0])
-        net_d = NetworkState(f=res["trace"]["f"][d, 0],
-                             rate=res["trace"]["rate"][d, 0])
-        _, _, lg = rs.gibbs_clustering(1, net_d, ncfg_b, prof, 16, 1,
-                                       6, 5, iters=iters, seed=0)
-        lat_g += lg / n_draws
-        lat_h += res["episodes"][d]["latency_s"][0] / n_draws
-        lat_r += res["episodes"][n_draws + d]["latency_s"][0] / n_draws
-    return lat_g, lat_h, lat_r
+        np.testing.assert_array_equal(
+            res["trace"]["f"][d, 0], res["trace"]["f"][2 * n_draws + d, 0])
+    return runner, res
+
+
+def _arm_means(res, n_draws, slot=0):
+    """Per-arm mean latency at one slot of the three-arm fleet."""
+    eps = res["episodes"]
+    lat_h = np.mean([eps[d]["latency_s"][slot] for d in range(n_draws)])
+    lat_r = np.mean([eps[n_draws + d]["latency_s"][slot]
+                     for d in range(n_draws)])
+    lat_g = np.mean([eps[2 * n_draws + d]["latency_s"][slot]
+                     for d in range(n_draws)])
+    return float(lat_g), float(lat_h), float(lat_r)
 
 
 def run(quick: bool = True) -> dict:
@@ -76,8 +86,8 @@ def run(quick: bool = True) -> dict:
         ncfg_b = NetworkCfg(n_devices=30, homogeneous=False,
                             n_subcarriers=bw)
         n_draws = 3 if quick else 10
-        lat_g, lat_h, lat_r = _baseline_fleets(ncfg_b, prof, n_draws,
-                                               iters)
+        _, res_b = _three_arm_fleet(ncfg_b, prof, n_draws, iters)
+        lat_g, lat_h, lat_r = _arm_means(res_b, n_draws)
         compare[f"bw_{bw}MHz"] = {
             "proposed": lat_g, "heuristic": lat_h, "random": lat_r,
             "gain_vs_heuristic": 1 - lat_g / lat_h,
@@ -98,6 +108,56 @@ def main(quick: bool = True):
               f"{v['random']:7.2f}   {v['gain_vs_heuristic']*100:6.1f}%  "
               f"{v['gain_vs_random']*100:8.1f}%")
     print("paper: 80.1% vs heuristic, 56.9% vs random (average)")
+
+
+def run_fig8b_smoke(out: str | None = None) -> dict:
+    """CI smoke for fig. 8(b): the three-arm fleet at 2 seeds x 3
+    policies x 3 slots on a small network, cross-checked against the
+    looped host reference (run_looped drives the real
+    ``TwoTimescaleController`` for the proposed rows), written as a
+    JSON artifact for the CI upload."""
+    import json
+    import os
+    import time
+
+    prof = pf.paper_constants_profile()
+    ncfg_b = NetworkCfg(n_devices=12, homogeneous=False, n_subcarriers=15)
+    n_draws, iters, rounds = 2, 25, 3
+    t0 = time.monotonic()
+    runner, res = _three_arm_fleet(ncfg_b, prof, n_draws, iters,
+                                   rounds=rounds, cluster_size=4)
+    fleet_s = time.monotonic() - t0
+    ref = runner.run_looped()
+    err = float(np.max(np.abs(res["trace"]["latency"] - ref["latency"])
+                       / np.maximum(np.abs(ref["latency"]), 1e-30)))
+    assert err < 1e-9, f"fleet diverged from looped host: {err}"
+    lat_g, lat_h, lat_r = _arm_means(res, n_draws)
+    assert lat_g <= lat_h + 1e-12 and lat_g <= lat_r + 1e-12, \
+        "proposed arm should not lose to equal-split baselines"
+    payload = {
+        "episodes": runner.E, "rounds": runner.T,
+        "arms": {"heuristic": lat_h, "random": lat_r, "proposed": lat_g},
+        "gain_vs_heuristic": 1 - lat_g / lat_h,
+        "gain_vs_random": 1 - lat_g / lat_r,
+        "max_rel_err_vs_looped": err,
+        "fleet_wall_s": fleet_s, "looped_wall_s": ref["wall_s"],
+    }
+    out = out or os.environ.get("FIG8B_SMOKE_JSON", "/tmp/fig8b_smoke.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    gh, gr = payload["gain_vs_heuristic"], payload["gain_vs_random"]
+    print(f"fig8b smoke: heuristic {lat_h:.2f}s  random {lat_r:.2f}s  "
+          f"proposed {lat_g:.2f}s  (gains {gh * 100:.1f}% / {gr * 100:.1f}%)")
+    print(f"  three arms, one dispatch: {fleet_s:.2f}s wall; looped host "
+          f"reference {ref['wall_s']:.2f}s; max rel err {err:.2e}")
+    print(f"results -> {out}")
+    return payload
+
+
+def smoke(quick: bool = True):
+    """``benchmarks.run`` entry: quick flag is accepted but the smoke is
+    already minimal."""
+    run_fig8b_smoke()
 
 
 if __name__ == "__main__":

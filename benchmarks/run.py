@@ -19,6 +19,7 @@ BENCHES = {
     "table2_latency": table2_latency.main,
     "fig7_cut_layer": fig7_cut_layer.main,
     "fig8_resource": fig8_resource.main,
+    "fig8b_smoke": fig8_resource.smoke,
     "fig5_training": fig5_training.main,
     "fig6_cluster_size": fig6_cluster_size.main,
     "roofline": roofline.main,

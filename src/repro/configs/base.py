@@ -267,17 +267,41 @@ class SimFleetCfg:
     policy/cluster-size selectors, device means and innovation streams
     (seed) — so the whole grid shares one XLA compile. Episodes with the
     same ``seed`` share their network realization (means + fading/compute
-    innovations), which gives common-random-number coupling across the
-    other grid axes (the fig. 7 cut sweep relies on it)."""
+    innovations, and the churn/planner draws), which gives
+    common-random-number coupling across the other grid axes (the fig. 7
+    cut sweep and the fig. 8(b) three-arm comparison rely on it).
+
+    The ``proposed`` policy is the paper's full two-timescale controller
+    run inside the jit: per-slot Gibbs clustering with embedded greedy
+    (Alg. 3/4, ``gibbs_iters`` sweeps, best of ``gibbs_chains`` lockstep
+    chains) and — when ``saa_cuts`` is set — Alg. 2 SAA cut re-selection
+    every ``epoch_len`` slots over the (cut x sample x chain) grid
+    around the episode's device means. ``saa_cuts=None`` keeps the
+    episode's spec cut fixed (pure small-timescale planning)."""
     rounds: int = 20                        # slots T per episode
     seeds: Tuple[int, ...] = (0,)
-    policies: Tuple[str, ...] = ("greedy",)  # spectrum policy: equal | greedy
+    policies: Tuple[str, ...] = ("greedy",)  # equal | greedy | proposed
     cluster_sizes: Tuple[int, ...] = (5,)   # target K per episode
     cuts: Tuple[int, ...] = (3,)            # cut layer v per episode
     batch_per_device: int = 16              # B in the eq. 15-25 cost model
     local_epochs: int = 1                   # L
     mean_seed: Optional[int] = None         # shared device_means seed;
                                             # None = per-episode seed
+    # -- proposed-policy (two-timescale controller) knobs ------------------
+    epoch_len: int = 5                      # slots per large-timescale epoch
+    gibbs_iters: int = 120                  # Alg. 4 sweeps per slot plan
+    gibbs_chains: int = 1                   # best-of-R lockstep chains
+    gibbs_delta: float = 1e-4               # Metropolis temperature
+    saa_samples: int = 3                    # J network samples per SAA cell
+    saa_gibbs_iters: int = 40               # Alg. 4 sweeps inside SAA
+    saa_cuts: Optional[Tuple[int, ...]] = None  # Alg. 2 candidate cuts;
+                                            # None = no SAA (fixed spec cut)
+    # -- stochastic-churn support ------------------------------------------
+    n_reserve: int = 0                      # reserve device rows for
+                                            # Bernoulli arrivals (p_arrive)
+    min_devices_floor: bool = False         # honor DynamicsCfg.min_devices
+                                            # (opt-in: False keeps every
+                                            # departure/depletion executing)
 
     @property
     def n_episodes(self) -> int:

@@ -103,7 +103,7 @@ def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
                      cluster_size: int, iters: int = 1000,
                      delta: float = 1e-4, seed: int = 0,
                      track: bool = False, sizes: Optional[Sequence[int]] = None,
-                     spectrum_fn=None):
+                     spectrum_fn=None, draws=None):
     """Alg. 4: random swap proposals accepted w.p. 1/(1+exp((new-old)/delta)).
 
     ``sizes`` (optional) partitions the N devices into clusters of the
@@ -112,10 +112,25 @@ def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
     ``spectrum_fn`` swaps in an alternative Alg. 3 implementation (e.g.
     the vectorized ``repro.sim.batched.greedy_spectrum_batched``).
 
+    ``draws = (init_key, prop_u)`` replaces the internal RNG with
+    pre-drawn randomness so an external (e.g. in-jit) mirror can share
+    the exact trajectory: ``init_key`` (N,) floats whose stable argsort
+    is the initial device ordering, and ``prop_u`` (iters, 5) uniforms
+    mapped per iteration to (cluster m, other cluster mp, member i,
+    member j, Metropolis accept) by the fixed rule below — ``iters`` is
+    then ``len(prop_u)``. The default ``seed`` stream is unchanged.
+
     Returns (clusters, xs, latency[, history])."""
     N = len(net.f)
     rng = np.random.default_rng(seed)
-    order = rng.permutation(N)
+    if draws is not None:
+        init_key, prop_u = draws
+        prop_u = np.asarray(prop_u, dtype=np.float64)
+        iters = prop_u.shape[0]
+        order = np.argsort(np.asarray(init_key, dtype=np.float64),
+                           kind="stable")
+    else:
+        order = rng.permutation(N)
     if sizes is not None:
         assert sum(sizes) == N, "cluster sizes must partition the devices"
         n_clusters = len(sizes)
@@ -132,17 +147,29 @@ def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
     hist = [cur]
     if n_clusters < 2:
         iters = 0          # nothing to swap
-    for _ in range(iters):
-        m, mp = rng.choice(n_clusters, size=2, replace=False)
-        i = rng.integers(len(clusters[m]))
-        j = rng.integers(len(clusters[mp]))
+    for it in range(iters):
+        if draws is not None:
+            # fixed uniform->index mapping, shared with the in-jit mirror
+            # (truncation of u * n is exact for u in [0, 1); the min()
+            # guards the measure-zero u == 1.0 edge)
+            u = prop_u[it]
+            m = min(int(u[0] * n_clusters), n_clusters - 1)
+            mp = min(int(u[1] * (n_clusters - 1)), n_clusters - 2)
+            mp += mp >= m
+            i = min(int(u[2] * len(clusters[m])), len(clusters[m]) - 1)
+            j = min(int(u[3] * len(clusters[mp])), len(clusters[mp]) - 1)
+        else:
+            m, mp = rng.choice(n_clusters, size=2, replace=False)
+            i = rng.integers(len(clusters[m]))
+            j = rng.integers(len(clusters[mp]))
         cand = [list(c) for c in clusters]
         cand[m][i], cand[mp][j] = cand[mp][j], cand[m][i]
         new, new_xs = _round_latency_cached(v, cand, net, ncfg, prof, B, L,
                                             cache, spectrum_fn)
         eps = 1.0 / (1.0 + math.exp(min((new - cur) / max(delta, 1e-12),
                                         700.0)))
-        if rng.random() < eps:
+        accept_u = rng.random() if draws is None else float(prop_u[it][4])
+        if accept_u < eps:
             clusters, cur, xs = cand, new, new_xs
         if cur < best[0]:
             best = (cur, [list(c) for c in clusters], [x.copy() for x in xs])

@@ -69,17 +69,29 @@ class TwoTimescaleController:
 
     # -- large timescale (Alg. 2) ---------------------------------------------
 
-    def select_cut(self, mu_f: np.ndarray, mu_snr: np.ndarray, slot: int
-                   ) -> Tuple[int, np.ndarray]:
+    def select_cut(self, mu_f: np.ndarray, mu_snr: np.ndarray, slot: int,
+                   draws=None) -> Tuple[int, np.ndarray]:
         """SAA cut selection around the current population means.
 
         Runs the replicated ``saa_cut_selection_batched`` — the whole
         (cut x sample x chain) grid in lockstep, ``scfg.gibbs_chains``
         chains per cell — which at ``gibbs_chains=1`` is bit-identical to
         the looped Alg. 2. A custom ``spectrum_fn`` falls back to the
-        looped path (the replicated evaluator hard-codes Alg. 3)."""
+        looped path (the replicated evaluator hard-codes Alg. 3).
+
+        ``draws`` switches the whole SAA evaluation onto pre-drawn
+        randomness (the episode-fleet oracle contract):
+        ``draws["eta"]`` (J, 2, n) standard normals become the J sampled
+        networks (``f = max(mu_f + f_sigma * eta_f, 1e7)``, snr likewise,
+        the ``sample_network`` rule), and ``draws["gibbs"][j][c]`` is the
+        ``(init_key, prop_u)`` pair for sample j, chain c — shared across
+        cuts, preserving the CRN coupling of the seeded path."""
         n = len(mu_f)
         sizes = balanced_sizes(n, self.scfg.cluster_size)
+        if draws is not None:
+            v, means = self._select_cut_draws(mu_f, mu_snr, sizes, draws)
+            self.v = v
+            return v, means
         kw = dict(
             n_clusters=len(sizes), cluster_size=max(sizes),
             n_samples=self.scfg.saa_samples,
@@ -102,13 +114,64 @@ class TwoTimescaleController:
         self.v = v
         return v, means
 
+    def _select_cut_draws(self, mu_f, mu_snr, sizes, draws
+                          ) -> Tuple[int, np.ndarray]:
+        """Alg. 2 on pre-drawn randomness (see ``select_cut``): J nets
+        from the eta normals, best-of-chains per (cut, sample) cell,
+        left-to-right sample accumulation — the rules the in-jit
+        episode-fleet SAA reproduces term by term."""
+        n = len(mu_f)
+        ncfg = self._ncfg_for(n)
+        eta = np.asarray(draws["eta"], dtype=np.float64)
+        gibbs = draws["gibbs"]                   # [sample][chain]
+        cuts = (list(self.scfg.cuts) if self.scfg.cuts is not None
+                else list(range(1, self.prof.n_cuts + 1)))
+        nets = []
+        for j in range(eta.shape[0]):
+            f = np.maximum(mu_f + ncfg.f_sigma * eta[j, 0], 1e7)
+            snr_db = mu_snr + ncfg.snr_sigma_db * eta[j, 1]
+            rate = ncfg.subcarrier_bw * np.log2(1.0 + 10.0 ** (snr_db / 10.0))
+            nets.append(NetworkState(f=f, rate=rate))
+        means = np.zeros(len(cuts))
+        for ci, v in enumerate(cuts):
+            tot = 0.0
+            for j, net in enumerate(nets):
+                best = min(
+                    rs.gibbs_clustering(
+                        v, net, ncfg, self.prof, self.B, self.L,
+                        n_clusters=len(sizes), cluster_size=max(sizes),
+                        sizes=sizes, draws=d,
+                        spectrum_fn=greedy_spectrum_batched)[2]
+                    for d in gibbs[j])
+                tot += best
+            means[ci] = tot / len(nets)
+        return cuts[int(np.argmin(means))], means
+
     # -- small timescale (Algs. 3/4) ------------------------------------------
 
-    def plan_slot(self, net: NetworkState, ids: np.ndarray, slot: int
-                  ) -> Plan:
+    def plan_slot(self, net: NetworkState, ids: np.ndarray, slot: int,
+                  draws=None) -> Plan:
+        """One slot's Gibbs + greedy plan (Algs. 3/4) over the snapshot.
+
+        ``draws`` (optional) is a list over chains of ``(init_key,
+        prop_u)`` pre-drawn randomness pairs (see
+        ``core.resource.gibbs_clustering``); the plan is then the
+        best-of-chains on those shared draws — the episode-fleet oracle
+        path, bypassing the seeded streams entirely."""
         assert self.v is not None, "select_cut must run before plan_slot"
         n = len(ids)
         sizes = balanced_sizes(n, self.scfg.cluster_size)
+        if draws is not None:
+            results = [rs.gibbs_clustering(
+                self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
+                n_clusters=len(sizes), cluster_size=max(sizes),
+                sizes=sizes, draws=d, spectrum_fn=greedy_spectrum_batched)
+                for d in draws]
+            clusters, xs, lat = results[int(np.argmin(
+                [r[2] for r in results]))]
+            return Plan(v=self.v, clusters=[list(c) for c in clusters],
+                        ids=np.asarray(ids), xs=[np.asarray(x) for x in xs],
+                        latency=float(lat))
         # distinct namespace from both the NetworkProcess streams and
         # select_cut's SAA stream (see the offset comment there)
         seed = self.scfg.seed + slot + 53_639
@@ -122,11 +185,20 @@ class TwoTimescaleController:
                 iters=self.scfg.gibbs_iters, seed=seed, chains=chains,
                 sizes=sizes)
         else:
-            clusters, xs, lat = rs.gibbs_clustering(
+            # best-of-R in the custom-spectrum_fn fallback too: chain 0
+            # draws from default_rng(seed) — bit-identical to the old
+            # single-chain call — and chain c > 0 from
+            # default_rng((seed, c)), the documented stream layout, so
+            # best-of-R latency is monotone non-increasing in `chains`
+            results = [rs.gibbs_clustering(
                 self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
                 n_clusters=len(sizes), cluster_size=max(sizes),
-                iters=self.scfg.gibbs_iters, seed=seed,
+                iters=self.scfg.gibbs_iters,
+                seed=(seed if c == 0 else (seed, c)),
                 sizes=sizes, spectrum_fn=self.spectrum_fn)
+                for c in range(chains)]
+            clusters, xs, lat = results[int(np.argmin(
+                [r[2] for r in results]))]
         return Plan(v=self.v, clusters=[list(c) for c in clusters],
                     ids=np.asarray(ids), xs=[np.asarray(x) for x in xs],
                     latency=float(lat))

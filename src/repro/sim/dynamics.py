@@ -138,10 +138,17 @@ class NetworkProcess:
         return Event(self.slot if slot is None else slot, kind, int(gid),
                      cause)
 
-    def sample_departures(self, slot: Optional[int] = None) -> List[Event]:
+    def sample_departures(self, slot: Optional[int] = None,
+                          u: Optional[np.ndarray] = None) -> List[Event]:
         """Forced + Bernoulli departures for ``slot`` (default: the
         process's current slot, which also stamps the events; never drops
-        below ``min_devices`` active)."""
+        below ``min_devices`` active).
+
+        ``u`` (optional, per-global-id uniforms) replaces the internal
+        RNG for the Bernoulli decisions — device ``gid`` departs iff
+        ``u[gid] < p_depart`` (subject to the floor). Lets an external
+        simulator share one pre-drawn stream with this process and match
+        its decisions exactly (the episode-fleet parity contract)."""
         slot = self.slot if slot is None else slot
         events: List[Event] = []
         for gid in self.dcfg.forced_departures.get(slot, ()):
@@ -153,14 +160,21 @@ class NetworkProcess:
             for gid in self.active_ids():
                 if self.n_active <= self.dcfg.min_devices:
                     break
-                if self.rng.random() < self.dcfg.p_depart:
+                draw = self.rng.random() if u is None else float(u[gid])
+                if draw < self.dcfg.p_depart:
                     events.append(self._depart(gid, "depart", slot))
         return events
 
-    def sample_arrivals(self) -> List[Event]:
+    def sample_arrivals(self, u: Optional[float] = None) -> List[Event]:
         """At most one Bernoulli arrival per slot; new devices draw fresh
-        means from the configured heterogeneity ranges."""
-        if self.dcfg.p_arrive <= 0 or self.rng.random() >= self.dcfg.p_arrive:
+        means from the configured heterogeneity ranges. ``u`` (optional)
+        replaces the internal RNG for the arrival decision (``u <
+        p_arrive``); the new device's means/state still come from the
+        process's own stream."""
+        if self.dcfg.p_arrive <= 0:
+            return []
+        draw = self.rng.random() if u is None else float(u)
+        if draw >= self.dcfg.p_arrive:
             return []
         c = self.ncfg
         if c.homogeneous:

@@ -224,6 +224,37 @@ def test_controller_repair_drops_empty_cluster():
     assert len(repaired.clusters) == len(plan.clusters) - 1
 
 
+def test_plan_slot_multichain_with_custom_spectrum_fn():
+    """gibbs_chains > 1 must be honored on the custom-spectrum_fn
+    fallback too (it used to silently run one chain): chain 0 draws the
+    old single-chain stream bit for bit, chains c > 0 draw
+    default_rng((seed, c)), and the best-of-R plan latency is monotone
+    non-increasing in the chain count."""
+    ncfg = NetworkCfg(n_devices=6, n_subcarriers=12)
+    proc = NetworkProcess(ncfg, DynamicsCfg(seed=0))
+    net, ids = proc.snapshot()
+    lats = []
+    for chains in (1, 2, 4):
+        scfg = SimCfg(cluster_size=3, gibbs_iters=25, cuts=(2,), seed=0,
+                      gibbs_chains=chains)
+        ctrl = TwoTimescaleController(PROF, ncfg, 16, 1, scfg,
+                                      spectrum_fn=rs.greedy_spectrum)
+        ctrl.v = 2
+        plan = ctrl.plan_slot(net, ids, slot=0)
+        assert sorted(i for c in plan.clusters for i in c) == list(range(6))
+        lats.append(plan.latency)
+    # chain 0 of every multichain run shares the chains=1 stream, so
+    # best-of-R can only improve: lat(1) >= lat(2) >= lat(4) bit-wise
+    assert lats[0] >= lats[1] >= lats[2]
+    # and chain 0 is bit-identical to the direct single-chain Gibbs call
+    sizes = balanced_sizes(6, 3)
+    _, _, direct = rs.gibbs_clustering(
+        2, net, ncfg, PROF, 16, 1, n_clusters=len(sizes),
+        cluster_size=max(sizes), iters=25, seed=0 + 0 + 53_639,
+        sizes=sizes, spectrum_fn=rs.greedy_spectrum)
+    assert lats[0] == direct
+
+
 # --------------------------------------------------------------------------
 # engine end-to-end
 # --------------------------------------------------------------------------
