@@ -11,10 +11,10 @@ the bit-equality asserts stay strict).
 Part 2 — best-of-R solution quality at equal seed: chain 0 reproduces the
 single chain, so best-of-R latency is monotone non-increasing in R.
 
-Part 3 — N-scaling sweep (N=30 -> 200+ devices), previously impractical
-with the nested-Python-loop planner: one multichain Gibbs slot plan per N;
-asserts the N=200 plan completes within ``PLANNER_N200_BUDGET_S``
-(default 10 s).
+Part 3 — N-scaling sweep (N=30 -> 10^4 devices): one slot plan per N —
+exact multichain Gibbs up to N=320, the hierarchical bucketed planner
+beyond (capping peak memory; tracemalloc peaks recorded per row); asserts
+the N=200 plan completes within ``PLANNER_N200_BUDGET_S`` (default 10 s).
 
 Writes the JSON result (speedups, latencies, sweep timings) to
 ``--out`` / ``$PLANNER_BENCH_JSON`` (default /tmp/bench_planner.json) —
@@ -29,6 +29,7 @@ import argparse
 import json
 import os
 import time
+import tracemalloc
 
 import numpy as np
 
@@ -36,6 +37,7 @@ from repro.core import resource as rs
 from repro.core.channel import NetworkCfg, device_means, sample_network
 from repro.core.profile import lenet_profile
 from repro.sim.batched import (gibbs_clustering_multichain,
+                               hierarchical_gibbs_clustering,
                                saa_cut_selection_batched)
 
 B, L = 16, 1
@@ -99,25 +101,45 @@ def bench_best_of_r(quick: bool, result: dict):
 
 
 def bench_n_scaling(quick: bool, result: dict):
-    """Plan a Gibbs round at N=30 -> 200+ devices (M=N/5 clusters)."""
+    """Plan a Gibbs round at N=30 -> 10^4 devices (M=N/5 clusters).
+
+    Up to N=320 this is the exact flat multichain planner; beyond that
+    (full mode) the flat cost tensor and iters=2N budget are impractical,
+    so the sweep switches to the hierarchical bucketed planner (bucket
+    population 160, per-bucket iters = 2 x bucket), which caps peak
+    memory per plan — tracemalloc peaks are recorded per row.
+    ``benchmarks.bench_scale`` carries the sweep on to 10^5."""
     prof = lenet_profile()
-    sweep = (30, 60, 120, 200) if quick else (30, 60, 120, 200, 320)
+    sweep = (30, 60, 120, 200) if quick \
+        else (30, 60, 120, 200, 320, 1000, 3000, 10_000)
     rows = []
-    print("N-scaling sweep (K=5, chains=4, iters=2N):")
+    print("N-scaling sweep (K=5, chains=4, iters=2N; flat <= 320, "
+          "hierarchical beyond):")
     for n in sweep:
         ncfg = NetworkCfg(n_devices=n)
         net = sample_network(ncfg, *device_means(ncfg, 0),
                              np.random.default_rng(0))
+        tracemalloc.start()
         t0 = time.perf_counter()
-        clusters, xs, lat = gibbs_clustering_multichain(
-            3, net, ncfg, prof, B, L, n // 5, 5, iters=2 * n, seed=0,
-            chains=4)
+        if n <= 320:
+            planner = "flat"
+            clusters, xs, lat = gibbs_clustering_multichain(
+                3, net, ncfg, prof, B, L, n // 5, 5, iters=2 * n, seed=0,
+                chains=4)
+        else:
+            planner = "hierarchical"
+            clusters, xs, lat = hierarchical_gibbs_clustering(
+                3, net, ncfg, prof, B, L, 5, iters=320, seed=0, chains=4,
+                bucket_size=160)
         wall = time.perf_counter() - t0
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
         assert sorted(d for c in clusters for d in c) == list(range(n))
         rows.append({"n_devices": n, "n_clusters": n // 5, "wall_s": wall,
+                     "peak_mb": peak / 2**20, "planner": planner,
                      "latency_s": lat})
-        print(f"  N={n:4d}  M={n // 5:3d}  plan {wall:6.2f} s  "
-              f"D_round {lat:8.2f} s")
+        print(f"  N={n:5d}  M={n // 5:4d}  plan {wall:6.2f} s  "
+              f"[{peak / 2**20:6.1f} MB, {planner}]  D_round {lat:8.2f} s")
         if n == 200:
             budget = float(os.environ.get("PLANNER_N200_BUDGET_S", "10"))
             assert wall < budget, \

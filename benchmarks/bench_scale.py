@@ -1,0 +1,287 @@
+"""Population-scale planning benchmark: N=30 -> 10^5 devices.
+
+Part 1 — plan-time / peak-memory scaling sweep: one hierarchical
+two-level Gibbs plan (``hierarchical_gibbs_clustering``: coarse
+(compute, channel) buckets of <= 160 devices, per-bucket lockstep chains,
+per-bucket iters = 2 x bucket population) per N, against the flat
+PR-7-era multichain planner (``gibbs_clustering_multichain``,
+iters = 2N) where the latter is tractable. Asserts:
+
+  * decisions-quality: on N <= 320 the hierarchical plan prices within
+    ``SCALE_QUALITY_TOL`` (default 2%) of the flat planner — exactly
+    (bit-identical) when forced to a single bucket, and within tolerance
+    at the sweep's multi-bucket setting;
+  * speedup: >= ``SCALE_MIN_SPEEDUP`` x faster than flat at the largest
+    common N (default floor 5 when that N >= 10^4 i.e. --full;
+    informational at quick scale; 0 waives — CI smoke does);
+  * sublinear per-decision growth: per-device plan time at the largest N
+    <= ``SCALE_SUBLIN_MAX_RATIO`` (default 1.5) x the per-device time at
+    the N=320 reference point (0 waives);
+  * memory: the largest-N plan's tracemalloc peak stays under
+    ``SCALE_MEM_BUDGET_MB`` (default 4096).
+
+Part 2 — top-k spectrum pruning (Alg. 3) on one wide cluster: full
+batched greedy vs ``greedy_spectrum_topk``; asserts k >= K bit-equality
+and reports the k << K time/quality trade.
+
+Part 3 — tiled cost evaluation: chunked ``PartitionBatchJ`` (lax.map
+over replica tiles) vs unchunked on a large partition batch; asserts
+bit-equality and reports the float32 opt-in's relative error.
+
+Writes the JSON result to ``--out`` / ``$SCALE_BENCH_JSON`` (default
+/tmp/bench_scale.json; CI uploads ``BENCH_scale.json``).
+
+    PYTHONPATH=src python -m benchmarks.bench_scale --quick
+    PYTHONPATH=src python -m benchmarks.bench_scale --full      # to 10^5
+    PYTHONPATH=src python -m benchmarks.run --only bench_scale
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.core.channel import NetworkCfg, device_means, sample_network
+from repro.core.latency import PartitionBatchJ
+from repro.core.profile import lenet_profile
+from repro.core.resource import greedy_spectrum_topk
+from repro.sim.batched import (gibbs_clustering_multichain,
+                               greedy_spectrum_batched,
+                               hierarchical_gibbs_clustering)
+from repro.sim.controller import balanced_sizes
+
+B, L = 16, 1
+K = 5                    # paper cluster size
+C = 30                   # paper subcarrier budget (per active cluster)
+V = 3                    # fixed cut layer for the sweep
+CHAINS = 2
+BUCKET = 160             # coarse bucket population for the sweep
+
+
+def _env_f(name: str, default: float) -> float:
+    return float(os.environ.get(name, str(default)))
+
+
+def _make_net(n: int, seed: int = 0):
+    ncfg = NetworkCfg(n_devices=n, n_subcarriers=C)
+    net = sample_network(ncfg, *device_means(ncfg, seed),
+                         np.random.default_rng(seed))
+    return ncfg, net
+
+
+def _timed_peak(fn):
+    """(result, wall_s, tracemalloc peak bytes) of fn() — host NumPy
+    allocations; the hierarchical path is numpy-only, so this is its
+    cost-tensor footprint."""
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    out = fn()
+    wall = time.perf_counter() - t0
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return out, wall, peak
+
+
+def _plan_hier(n, net, ncfg, bucket_size=BUCKET):
+    n_b = min(n, bucket_size)
+    return hierarchical_gibbs_clustering(
+        V, net, ncfg, lenet_profile(), B, L, K, iters=2 * n_b, seed=0,
+        chains=CHAINS, bucket_size=bucket_size)
+
+
+def _plan_flat(n, net, ncfg):
+    sizes = balanced_sizes(n, K)
+    return gibbs_clustering_multichain(
+        V, net, ncfg, lenet_profile(), B, L, len(sizes), max(sizes),
+        iters=2 * n, seed=0, chains=CHAINS, sizes=sizes)
+
+
+def bench_scaling(quick: bool, max_n: int, result: dict):
+    sweep = [100, 320, 1000, 3000] if quick \
+        else [100, 320, 1000, 3000, 10_000, 30_000, 100_000]
+    sweep = [n for n in sweep if n <= max_n] or [max_n]
+    base_max = 1000 if quick else 10_000
+    rows = []
+    print(f"scaling sweep (K={K}, C={C}, chains={CHAINS}, "
+          f"bucket<={BUCKET}, hier iters=2 x bucket, flat iters=2N):")
+    for n in sweep:
+        ncfg, net = _make_net(n)
+        (cl, xs, lat), wall, peak = _timed_peak(
+            lambda: _plan_hier(n, net, ncfg))
+        assert sorted(d for c in cl for d in c) == list(range(n))
+        assert all(int(np.sum(x)) == C for x in xs)
+        row = {"n_devices": n, "planner": "hierarchical", "wall_s": wall,
+               "per_device_ms": 1e3 * wall / n, "peak_mb": peak / 2**20,
+               "latency_s": lat}
+        if n <= base_max:
+            (_, _, lat_f), wall_f, _ = _timed_peak(
+                lambda: _plan_flat(n, net, ncfg))
+            row.update(flat_wall_s=wall_f, flat_latency_s=lat_f,
+                       speedup=wall_f / wall)
+            print(f"  N={n:7d}  hier {wall:7.2f} s  "
+                  f"({row['per_device_ms']:6.2f} ms/dev, "
+                  f"{row['peak_mb']:6.1f} MB)  "
+                  f"flat {wall_f:7.2f} s  speedup {row['speedup']:5.1f}x  "
+                  f"D {lat:9.2f} vs {lat_f:9.2f}")
+        else:
+            print(f"  N={n:7d}  hier {wall:7.2f} s  "
+                  f"({row['per_device_ms']:6.2f} ms/dev, "
+                  f"{row['peak_mb']:6.1f} MB)  "
+                  f"D {lat:9.2f}   [flat intractable]")
+        rows.append(row)
+    result["scaling"] = rows
+
+    # -- decisions-quality on N <= 320 (flat tractable) --------------------
+    tol = _env_f("SCALE_QUALITY_TOL", 0.02)
+    qrows = []
+    for n in (n for n in sweep if n <= 320):
+        ncfg, net = _make_net(n)
+        lat_f = _plan_flat(n, net, ncfg)[2]
+        lat_1 = _plan_hier(n, net, ncfg, bucket_size=n)[2]  # single bucket
+        lat_m = _plan_hier(n, net, ncfg)[2]                 # sweep buckets
+        qrows.append({"n_devices": n, "flat": lat_f, "hier_single": lat_1,
+                      "hier_multi": lat_m})
+        print(f"  quality N={n}: flat {lat_f:.4f}  single-bucket {lat_1:.4f}"
+              f"  multi-bucket {lat_m:.4f}")
+        assert lat_1 == lat_f, "single-bucket fallback diverged from flat"
+        assert lat_m <= (1 + tol) * lat_f, \
+            f"multi-bucket latency {lat_m:.4f} > {1 + tol:g}x flat {lat_f:.4f}"
+    result["quality"] = {"tol": tol, "rows": qrows}
+
+    # -- speedup floor at the largest common N -----------------------------
+    common = [r for r in rows if "speedup" in r]
+    if common:
+        top = common[-1]
+        # the >=5x floor is the --full acceptance gate at N=10^4; at
+        # quick scale flat is still cheap enough that the ratio is
+        # noise-dominated, so it is informational there unless the env
+        # var opts in
+        floor = _env_f("SCALE_MIN_SPEEDUP",
+                       5.0 if top["n_devices"] >= 10_000 else 0.0)
+        print(f"  speedup at N={top['n_devices']}: {top['speedup']:.1f}x "
+              f"(floor {floor:g}x)")
+        if floor > 0:
+            assert top["speedup"] >= floor, \
+                (f"hierarchical speedup {top['speedup']:.1f}x < {floor:g}x "
+                 f"at N={top['n_devices']}")
+        result["speedup"] = {"n_devices": top["n_devices"],
+                             "speedup": top["speedup"], "floor": floor}
+
+    # -- sublinear per-decision growth -------------------------------------
+    ref = next((r for r in rows if r["n_devices"] >= 320), rows[0])
+    top = rows[-1]
+    if top["n_devices"] > ref["n_devices"]:
+        ratio = top["per_device_ms"] / ref["per_device_ms"]
+        rmax = _env_f("SCALE_SUBLIN_MAX_RATIO", 1.5)
+        print(f"  per-device plan time: {ref['per_device_ms']:.2f} ms "
+              f"(N={ref['n_devices']}) -> {top['per_device_ms']:.2f} ms "
+              f"(N={top['n_devices']}), ratio {ratio:.2f} (max {rmax:g})")
+        if rmax > 0:
+            assert ratio <= rmax, \
+                (f"per-device plan time grew {ratio:.2f}x from "
+                 f"N={ref['n_devices']} to N={top['n_devices']} (> {rmax:g})")
+        result["sublinearity"] = {"ref_n": ref["n_devices"],
+                                  "top_n": top["n_devices"], "ratio": ratio,
+                                  "max_ratio": rmax}
+
+    # -- memory budget at the largest N ------------------------------------
+    budget = _env_f("SCALE_MEM_BUDGET_MB", 4096.0)
+    print(f"  peak memory at N={top['n_devices']}: {top['peak_mb']:.1f} MB "
+          f"(budget {budget:g} MB)")
+    assert top["peak_mb"] < budget, \
+        (f"N={top['n_devices']} plan peaked at {top['peak_mb']:.0f} MB "
+         f">= {budget:g} MB budget")
+    result["memory"] = {"n_devices": top["n_devices"],
+                        "peak_mb": top["peak_mb"], "budget_mb": budget}
+
+
+def bench_topk(quick: bool, result: dict):
+    """Top-k pruning on one wide cluster (Kc devices, 2Kc subcarriers)."""
+    Kc = 64 if quick else 256
+    prof = lenet_profile()
+    ncfg = NetworkCfg(n_devices=Kc, n_subcarriers=2 * Kc)
+    net = sample_network(ncfg, *device_means(ncfg, 1),
+                         np.random.default_rng(1))
+    devs = list(range(Kc))
+    t0 = time.perf_counter()
+    x_full, lat_full = greedy_spectrum_batched(V, devs, net, ncfg, prof,
+                                               B, L)
+    t_full = time.perf_counter() - t0
+    x_eq, lat_eq = greedy_spectrum_topk(V, devs, net, ncfg, prof, B, L,
+                                        k=Kc)
+    assert np.array_equal(x_full, x_eq) and lat_full == lat_eq, \
+        "top-k with k == K diverged from full greedy"
+    rows = []
+    print(f"top-k greedy (one cluster, K={Kc}, C={2 * Kc}): "
+          f"full {t_full:.2f} s, D {lat_full:.4f}")
+    for k in (8, 16, 32):
+        t0 = time.perf_counter()
+        _, lat_k = greedy_spectrum_topk(V, devs, net, ncfg, prof, B, L, k=k)
+        t_k = time.perf_counter() - t0
+        gap = lat_k / lat_full - 1.0
+        rows.append({"k": k, "wall_s": t_k, "speedup": t_full / t_k,
+                     "latency_s": lat_k, "quality_gap": gap})
+        print(f"  k={k:3d}: {t_k:6.2f} s ({t_full / t_k:5.1f}x)  "
+              f"D {lat_k:.4f}  (+{100 * gap:.2f}%)")
+    result["topk"] = {"K": Kc, "C": 2 * Kc, "t_full_s": t_full,
+                      "latency_full_s": lat_full, "rows": rows}
+
+
+def bench_tiled(quick: bool, result: dict):
+    """Chunked PartitionBatchJ on a large replica batch."""
+    R = 2000 if quick else 8000
+    n, sizes = 320, balanced_sizes(320, K)
+    prof = lenet_profile()
+    ncfg, net = _make_net(n, 2)
+    rng = np.random.default_rng(2)
+    dev = np.stack([rng.permutation(n) for _ in range(R)])
+    xs = rng.integers(1, 7, size=(R, n)).astype(np.float64)
+
+    def run(**kw):
+        pbj = PartitionBatchJ(V, net, ncfg, prof, B, L, sizes, dev, **kw)
+        t0 = time.perf_counter()
+        lat = pbj.latencies(xs)
+        return lat, time.perf_counter() - t0
+
+    lat0, t0s = run()
+    lat_c, t_c = run(chunk_size=128)
+    assert np.array_equal(lat_c, lat0), "chunked evaluation diverged"
+    lat_32, t_32 = run(dtype=np.float32, chunk_size=128)
+    err = float(np.max(np.abs(lat_32 - lat0) / lat0))
+    assert err < 1e-5, f"float32 relative error {err:.2e} >= 1e-5"
+    print(f"tiled PartitionBatchJ (R={R}, N={n}): unchunked {t0s:.2f} s, "
+          f"chunk=128 {t_c:.2f} s (bit-identical), "
+          f"float32 rel err {err:.1e}")
+    result["tiled"] = {"R": R, "n_devices": n, "t_unchunked_s": t0s,
+                       "t_chunked_s": t_c, "float32_rel_err": err}
+
+
+def main(quick: bool = True, out: str = None, max_n: int = None):
+    out = out or os.environ.get("SCALE_BENCH_JSON", "/tmp/bench_scale.json")
+    if max_n is None:
+        max_n = 3000 if quick else 100_000
+    result = {"quick": quick, "max_n": max_n}
+    bench_scaling(quick, max_n, result)
+    bench_topk(quick, result)
+    bench_tiled(quick, result)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"results -> {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="sweep to 3k devices (default)")
+    mode.add_argument("--full", action="store_true",
+                      help="sweep to 100k devices")
+    ap.add_argument("--max-n", type=int, default=None,
+                    help="cap the sweep (CI smoke uses 3000)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    main(quick=not args.full, out=args.out, max_n=args.max_n)

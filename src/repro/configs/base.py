@@ -252,6 +252,17 @@ class SimCfg:
     cuts: Optional[Tuple[int, ...]] = None  # candidate cut layers (None = all)
     trace_path: Optional[str] = None # JSONL trace destination
     seed: int = 0
+    # -- population-scale planning knobs -----------------------------------
+    plan_mode: str = "flat"          # "flat" = one Gibbs over all devices;
+                                     # "bucketed" = hierarchical two-level
+                                     # clustering (bucket_devices + per-
+                                     # bucket lockstep Gibbs). With
+                                     # n <= bucket_size the bucketed plan
+                                     # is bit-identical to flat (tested)
+    bucket_size: int = 320           # target devices per coarse bucket
+    spectrum_topk: int = 0           # >0: greedy Alg. 3 argmins scan only
+                                     # the k worst-score devices per step
+                                     # (k >= cluster size is exact)
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -302,6 +313,11 @@ class SimFleetCfg:
     min_devices_floor: bool = False         # honor DynamicsCfg.min_devices
                                             # (opt-in: False keeps every
                                             # departure/depletion executing)
+    cost_chunk: int = 0                     # >0: stream the in-jit greedy
+                                            # candidate tensors through
+                                            # lax.map in tiles of this many
+                                            # clusters (bounds peak memory;
+                                            # decisions unchanged, tested)
 
     @property
     def n_episodes(self) -> int:

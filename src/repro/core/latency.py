@@ -188,6 +188,26 @@ class PartitionBatch:
             total = total + per[:, m]
         return total
 
+    def device_scores(self, xs: np.ndarray) -> np.ndarray:
+        """(R, N) allocations -> (R, N) per-device straggler scores: each
+        device's summand inside the three phase maxima, combined as
+        d_S + (L-1) d_I + d_E — the latency bound the device's current
+        allocation enforces on its cluster. The top-k spectrum pruning
+        (``core.resource.greedy_spectrum_topk``) restricts each greedy
+        step's argmin to the k largest-score devices; only a straggler's
+        increment can lower a phase max, so high-score devices are the
+        only plausible winners."""
+        xs = np.asarray(xs, dtype=np.float64)
+        if xs.ndim == 1:
+            xs = xs[None, :]
+        xr = xs * self.r
+        tau_s = self.num_s / xr                          # (17)
+        tau_g = self.num_g / xr                          # (20)
+        tau_t = self.num_t / xr                          # (23)
+        gu = tau_g + self.tau_u
+        return (self.bd + tau_s) + (self.L - 1) * (gu + self.tau_d + tau_s) \
+            + (gu + tau_t)
+
 
 def cluster_latency_batch(v: int, devices: Sequence[int], xs: np.ndarray,
                           net: NetworkState, ncfg: NetworkCfg,
@@ -293,3 +313,214 @@ def fl_round_latency(net: NetworkState, ncfg: NetworkCfg, prof: CutProfile,
                + local_iters * B * (whole_F + whole_B) / (net.f * ncfg.kappa)
                + xi_model / (x * net.rate))
     return float(np.max(per_dev))
+
+
+# --------------------------------------------------------------------------
+# jnp cost engine — eqs. (15)-(25), operand order of cluster_latency.
+# jax is imported lazily inside these functions so that importing
+# repro.core.latency stays jax-free: the rt worker processes defer jax
+# initialization into their handlers and must not pull it in at import.
+# --------------------------------------------------------------------------
+
+_CST_KEYS = ("xi_d", "xi_s", "xi_g", "gamma_dF", "gamma_dB",
+             "gamma_sF", "gamma_sB")
+
+
+def _cluster_latency_j(cst, fd, rd, xs, mask, csize, *, B: int, L: int,
+                       C: int, f_server_kappa: float, kappa: float,
+                       physical_gradients: bool = False):
+    """Masked jnp port of ``cluster_latency`` over (..., K) cluster rows.
+
+    ``cst``: per-cut profile constants, each a leading-axes shape ending
+    in singleton(s) so it broadcasts against the (..., K) per-device
+    terms; ``fd``/``rd``: gathered device compute / subcarrier rate;
+    ``xs``: subcarrier allocation (padded slots must be >= 1); ``mask``:
+    real device slots; ``csize``: real cluster size at the REDUCED rank
+    (broadcastable against the (...,) per-cluster output; 0 = padded
+    cluster -> latency 0). Every expression keeps the operand order of
+    the scalar NumPy path, so values agree to float64 tolerance (only
+    XLA-vs-NumPy ulp effects remain; association is identical)."""
+    import jax.numpy as jnp
+
+    def red(a):
+        # constants at the post-max rank (drop the singleton K axis)
+        return a[..., 0] if getattr(a, "ndim", 0) else a
+
+    f = fd * kappa
+    xi_g = cst["xi_g"] * (B if physical_gradients else 1.0)
+    tau_b = cst["xi_d"] / (C * rd)                   # (15)
+    tau_d = B * cst["gamma_dF"] / f                  # (16)
+    tau_s = B * cst["xi_s"] / (xs * rd)              # (17)
+    tau_e = csize * B * (red(cst["gamma_sF"]) + red(cst["gamma_sB"])) \
+        / f_server_kappa                             # (18)
+    tau_g = xi_g / (xs * rd)                         # (20)
+    tau_u = B * cst["gamma_dB"] / f                  # (21)
+    tau_t = cst["xi_d"] / (xs * rd)                  # (23)
+
+    def mx(v):
+        return jnp.max(jnp.where(mask, v, -jnp.inf), axis=-1)
+
+    d_S = mx(tau_b + tau_d + tau_s) + tau_e          # (19)
+    d_I = mx(tau_g + tau_u + tau_d + tau_s) + tau_e  # (22)
+    d_E = mx(tau_g + tau_u + tau_t)                  # (24)
+    D = d_S + (L - 1) * d_I + d_E
+    return jnp.where(csize > 0, D, 0.0)
+
+
+def _sum_left_to_right(per_cluster):
+    """(..., M) -> (...,) accumulated m = 0, 1, ... exactly like the
+    Python ``sum`` in ``round_latency`` (padded clusters add exact 0.0,
+    a bitwise no-op)."""
+    total = per_cluster[..., 0]
+    for m in range(1, per_cluster.shape[-1]):
+        total = total + per_cluster[..., m]
+    return total
+
+
+class PartitionBatchJ:
+    """jnp port of :class:`PartitionBatch`: scores R full M-cluster
+    partitions — optionally per-replica cuts and stacked network draws —
+    through :func:`_cluster_latency_j`.
+
+    Same constructor and ``cluster_latencies`` / ``latencies`` contract
+    as the NumPy class (cluster-by-cluster ``sizes`` layout, (R, N)
+    allocations, row broadcasting); at the default ``dtype=np.float64``
+    values agree with it to tight float64 tolerance on identical inputs
+    (tests/test_simfleet.py pins randomized (v, sizes, draws) grids). The
+    episode-fleet simulator and the rewired fig. 7/8 + table 2
+    benchmarks share this one cost implementation.
+
+    Population-scale knobs:
+
+    * ``dtype=np.float32`` halves the cost-tensor footprint; parity with
+      float64 is tolerance-tested (~1e-5 relative) rather than exact.
+    * ``chunk_size=c`` streams :meth:`cluster_latencies` through
+      ``lax.map`` over tiles of c replica rows, bounding the per-term
+      intermediates at (c, M, Kmax) instead of (R, M, Kmax). The last
+      ragged tile is padded by repeating the final row and trimmed after
+      the map, so results are bit-identical to the unchunked path for
+      every chunk size (tests pin this)."""
+
+    def __init__(self, v, net: NetworkState, ncfg: NetworkCfg,
+                 prof: CutProfile, B: int, L: int, sizes: Sequence[int],
+                 device_idx: np.ndarray, net_rows=None,
+                 physical_gradients: bool = False,
+                 dtype=np.float64, chunk_size: int | None = None):
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        sizes = np.asarray(sizes, dtype=np.int64)
+        dev = np.asarray(device_idx, dtype=np.int64)
+        if dev.ndim == 1:
+            dev = dev[None, :]
+        assert dev.shape[1] == int(sizes.sum()), \
+            "device_idx must be laid out cluster-by-cluster per `sizes`"
+        self.M, self.Kmax = len(sizes), int(sizes.max())
+        self.N = int(sizes.sum())
+        self.sizes = sizes
+        self.starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        self.B, self.L = B, L
+        self.C = ncfg.n_subcarriers
+        self.kappa = float(ncfg.kappa)
+        self.f_server_kappa = ncfg.f_server * ncfg.kappa
+        self.physical = physical_gradients
+        self.dtype = np.dtype(dtype)
+        self.chunk_size = int(chunk_size) if chunk_size else 0
+
+        v_arr = np.asarray(v)
+        cst = {k: np.asarray(getattr(prof, k), dtype=np.float64)[v_arr - 1]
+               for k in _CST_KEYS}
+        f_all = np.asarray(net.f, dtype=np.float64)
+        r_all = np.asarray(net.rate, dtype=np.float64)
+        if f_all.ndim == 1:
+            fd, rd = f_all[dev], r_all[dev]
+        else:
+            rows = np.asarray(net_rows, dtype=np.int64)[:, None]
+            fd, rd = f_all[rows, dev], r_all[rows, dev]
+
+        with enable_x64():
+            # (R?, M, Kmax) padded views + static slot masks
+            self._mask = jnp.asarray(self._to_slots(
+                np.ones((1, self.N)), fill=0.0) > 0.5)[0]
+            self._csize = jnp.asarray(sizes)
+            self._fd = jnp.asarray(self._to_slots(fd, fill=1.0)
+                                   .astype(self.dtype))
+            self._rd = jnp.asarray(self._to_slots(rd, fill=1.0)
+                                   .astype(self.dtype))
+            self._cst = {k: jnp.asarray(a.astype(self.dtype))[..., None, None]
+                         if a.ndim else jnp.asarray(a.astype(self.dtype))
+                         for k, a in cst.items()}
+
+    def _to_slots(self, arr: np.ndarray, fill: float) -> np.ndarray:
+        """(R, N) cluster-by-cluster layout -> (R, M, Kmax) padded."""
+        arr = np.asarray(arr, dtype=np.float64)
+        if arr.ndim == 1:
+            arr = arr[None, :]
+        out = np.full((arr.shape[0], self.M, self.Kmax), fill)
+        for m, (s, k) in enumerate(zip(self.starts, self.sizes)):
+            out[:, m, :k] = arr[:, s:s + k]
+        return out
+
+    def _eval(self, x, cst, fd, rd):
+        return _cluster_latency_j(
+            cst, fd, rd, x, self._mask, self._csize,
+            B=self.B, L=self.L, C=self.C,
+            f_server_kappa=self.f_server_kappa, kappa=self.kappa,
+            physical_gradients=self.physical)
+
+    def _eval_chunked(self, x):
+        """Stream replica rows through ``lax.map`` in tiles of
+        ``chunk_size``: per-term intermediates are bounded at
+        (chunk, M, Kmax). The ragged last tile is padded by repeating the
+        final row (trimmed after), so values are bit-identical to the
+        unchunked evaluation for every chunk size."""
+        import jax
+        import jax.numpy as jnp
+
+        R = max(x.shape[0], self._fd.shape[0])
+        c = min(self.chunk_size, R)
+        nch = -(-R // c)
+        pad = nch * c - R
+
+        def tiles(a):
+            a = jnp.broadcast_to(a, (R,) + a.shape[1:])
+            if pad:
+                a = jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)])
+            return a.reshape((nch, c) + a.shape[1:])
+
+        per_rep = {k: a for k, a in self._cst.items()
+                   if getattr(a, "ndim", 0)}
+        shared = {k: a for k, a in self._cst.items()
+                  if not getattr(a, "ndim", 0)}
+        xt, fdt, rdt = tiles(x), tiles(self._fd), tiles(self._rd)
+        cst_t = {k: tiles(a) for k, a in per_rep.items()}
+
+        def one(args):
+            xc, fdc, rdc, cstc = args
+            return self._eval(xc, {**shared, **cstc}, fdc, rdc)
+
+        D = jax.lax.map(one, (xt, fdt, rdt, cst_t))
+        return D.reshape((nch * c,) + D.shape[2:])[:R]
+
+    def cluster_latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(R, N) allocations -> (R, M) per-cluster latencies D_m."""
+        from jax.experimental import enable_x64
+        import jax.numpy as jnp
+
+        with enable_x64():
+            x = jnp.asarray(self._to_slots(np.asarray(xs, np.float64),
+                                           fill=1.0).astype(self.dtype))
+            if self.chunk_size:
+                D = self._eval_chunked(x)
+            else:
+                D = self._eval(x, self._cst, self._fd, self._rd)
+        return np.asarray(D)
+
+    def latencies(self, xs: np.ndarray) -> np.ndarray:
+        """(R, N) allocations -> (R,) round totals (left-to-right cluster
+        accumulation, as ``PartitionBatch.latencies``)."""
+        per = self.cluster_latencies(xs)
+        total = per[:, 0].copy()
+        for m in range(1, self.M):
+            total = total + per[:, m]
+        return total

@@ -12,7 +12,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.channel import NetworkCfg, NetworkState, device_means, sample_network
-from repro.core.latency import CutProfile, cluster_latency
+from repro.core.latency import CutProfile, PartitionBatch, cluster_latency
 
 
 # --------------------------------------------------------------------------
@@ -51,6 +51,52 @@ def greedy_spectrum(v: int, devices: Sequence[int], net: NetworkState,
         best_k = int(np.argmin(cands))
         x[best_k] += 1
         cur = cands[best_k]
+    return x, cur
+
+
+def greedy_spectrum_topk(v: int, devices: Sequence[int], net: NetworkState,
+                         ncfg: NetworkCfg, prof: CutProfile, B: int, L: int,
+                         C: Optional[int] = None, k: int = 16
+                         ) -> Tuple[np.ndarray, float]:
+    """Top-k-pruned Alg. 3: each greedy step evaluates candidate grants
+    only for the ``min(k, K)`` devices with the largest straggler score
+    (``PartitionBatch.device_scores`` — the latency bound the device's
+    current allocation enforces on its cluster) instead of scanning all
+    K devices. One extra subcarrier can only lower the cluster latency
+    through the phase maxima, and only a near-max (high-score) device's
+    term sits in them, so low-score devices are implausible winners.
+
+    Exactness: with ``k >= K`` the pruned candidate set is all K devices
+    in ascending index order, the candidate latencies come from the
+    bit-exact ``PartitionBatch``, and ``argmin`` keeps the first-index
+    tie-break — so the result is bit-identical to ``greedy_spectrum``
+    (property-tested on randomized grids). With ``k < K`` decisions are
+    heuristic; the scale benchmark prices the quality gap."""
+    C = ncfg.n_subcarriers if C is None else C
+    K = len(devices)
+    assert C >= K, "need at least one subcarrier per device"
+    x = np.ones(K, dtype=np.int64)
+    pb = PartitionBatch(v, net, ncfg, prof, B, L, [K],
+                        np.asarray(devices)[None, :])
+    cur = float(pb.latencies(x[None, :])[0])
+    if C == K:
+        # exactly one subcarrier per device is the only feasible point
+        return x, cur
+    k0 = min(int(k), K)
+    assert k0 >= 1, "k must be >= 1"
+    eye = np.eye(K, dtype=np.int64)
+    for _ in range(C - K):
+        if k0 < K:
+            scores = pb.device_scores(x[None, :])[0]
+            # ascending candidate order preserves the first-index
+            # tie-break within the pruned set
+            sel = np.sort(np.argpartition(-scores, k0 - 1)[:k0])
+        else:
+            sel = np.arange(K)
+        lats = pb.latencies(x[None, :] + eye[sel])
+        b = int(np.argmin(lats))
+        x[sel[b]] += 1
+        cur = float(lats[b])
     return x, cur
 
 
@@ -222,6 +268,38 @@ def random_clustering(v, net, ncfg, prof, B, L, n_clusters, cluster_size,
         xs = _uniform_xs(clusters, ncfg)
         lat = round_latency(v, clusters, xs, net, ncfg, prof, B, L)
     return clusters, xs, lat
+
+
+# --------------------------------------------------------------------------
+# population scale — coarse (compute, channel) bucketing
+# --------------------------------------------------------------------------
+
+def bucket_devices(net: NetworkState, n_buckets: int) -> List[np.ndarray]:
+    """Coarse-bucket N devices by joint (compute, channel) quantiles for
+    hierarchical two-level clustering: rank every device by f and by
+    rate, sort by the rank sum (stable, so ties break on device id), and
+    chop the order into ``n_buckets`` balanced contiguous chunks —
+    devices in a bucket occupy adjacent quantiles of both resources, so
+    within-bucket Gibbs swaps trade near-peers (the bucket-then-solve
+    decomposition of heterogeneous-edge PSL, arXiv:2403.15815).
+
+    ``n_buckets == 1`` returns the identity bucket ``[arange(N)]``, which
+    makes the hierarchical planner collapse to the flat one bit-exactly
+    (``sim.batched.hierarchical_gibbs_clustering`` relies on this)."""
+    N = len(net.f)
+    n_buckets = max(1, min(int(n_buckets), N))
+    if n_buckets == 1:
+        return [np.arange(N)]
+    rf = np.empty(N, dtype=np.int64)
+    rf[np.argsort(net.f, kind="stable")] = np.arange(N)
+    rr = np.empty(N, dtype=np.int64)
+    rr[np.argsort(net.rate, kind="stable")] = np.arange(N)
+    order = np.argsort(rf + rr, kind="stable")
+    base, rem = divmod(N, n_buckets)
+    sizes = np.full(n_buckets, base, dtype=np.int64) + \
+        (np.arange(n_buckets) < rem)
+    bounds = np.concatenate([[0], np.cumsum(sizes)])
+    return [order[bounds[b]:bounds[b + 1]] for b in range(n_buckets)]
 
 
 # --------------------------------------------------------------------------

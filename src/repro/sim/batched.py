@@ -44,7 +44,8 @@ from repro.core.latency import (BatchedClusterEvaluator, CutProfile,
 __all__ = ["BatchedClusterEvaluator", "PartitionBatch",
            "greedy_spectrum_batched", "gibbs_clustering_batched",
            "saa_cut_selection_batched", "gibbs_clustering_multichain",
-           "MultiChainResult"]
+           "MultiChainResult", "hierarchical_gibbs_clustering",
+           "HierarchicalResult"]
 
 
 def greedy_spectrum_batched(v: int, devices: Sequence[int],
@@ -92,7 +93,7 @@ def _chain_rng(seed: int, chain: int) -> np.random.Generator:
 
 
 def _greedy_group(tasks, net: NetworkState, ncfg: NetworkCfg,
-                  prof: CutProfile, B: int, L: int):
+                  prof: CutProfile, B: int, L: int, topk: int = 0):
     """Alg. 3 greedy run in lockstep for G same-size clusters.
 
     ``tasks``: list of (v, net_row, sorted device tuple) with equal
@@ -100,7 +101,13 @@ def _greedy_group(tasks, net: NetworkState, ncfg: NetworkCfg,
     allocations through one ``PartitionBatch`` broadcast; candidate
     values (and therefore argmin tie-breaks) are bit-identical to the
     scalar ``core.resource.greedy_spectrum``. Returns [(x, lat)] aligned
-    with the sorted keys."""
+    with the sorted keys.
+
+    ``topk`` > 0 prunes each step's candidates to the min(topk, K)
+    largest-``device_scores`` devices per cluster (ascending index order
+    inside the pruned set), as ``core.resource.greedy_spectrum_topk``;
+    at ``topk >= K`` the candidate batch — and every decision — is
+    bit-identical to the unpruned path."""
     G, K = len(tasks), len(tasks[0][2])
     C = ncfg.n_subcarriers
     assert C >= K, "need at least one subcarrier per device"
@@ -112,21 +119,29 @@ def _greedy_group(tasks, net: NetworkState, ncfg: NetworkCfg,
     cur = pb0.latencies(X)
     if C == K:
         return [(X[g].copy(), float(cur[g])) for g in range(G)]
-    eye = np.eye(K, dtype=np.int64)
-    pb = PartitionBatch(np.repeat(vs, K), net, ncfg, prof, B, L, [K],
-                        np.repeat(dev, K, axis=0),
-                        net_rows=np.repeat(rows, K))
+    k0 = min(int(topk), K) if topk else K
+    pb = PartitionBatch(np.repeat(vs, k0), net, ncfg, prof, B, L, [K],
+                        np.repeat(dev, k0, axis=0),
+                        net_rows=np.repeat(rows, k0))
     gi = np.arange(G)
     for _ in range(C - K):
-        cands = pb.latencies(
-            (X[:, None, :] + eye[None]).reshape(G * K, K)).reshape(G, K)
-        best = np.argmin(cands, axis=1)
-        X[gi, best] += 1
-        cur = cands[gi, best]
+        if k0 < K:
+            scores = pb0.device_scores(X)
+            sel = np.sort(np.argpartition(-scores, k0 - 1, axis=1)[:, :k0],
+                          axis=1)
+        else:
+            sel = np.broadcast_to(np.arange(K), (G, K))
+        cand = np.repeat(X, k0, axis=0)
+        cand[np.arange(G * k0), sel.reshape(-1)] += 1
+        lats = pb.latencies(cand).reshape(G, k0)
+        b = np.argmin(lats, axis=1)
+        X[gi, sel[gi, b]] += 1
+        cur = lats[gi, b]
     return [(X[g].copy(), float(cur[g])) for g in range(G)]
 
 
-def _fill_cache(cache: Dict, triples, net, ncfg, prof, B, L) -> None:
+def _fill_cache(cache: Dict, triples, net, ncfg, prof, B, L,
+                topk: int = 0) -> None:
     """Run lockstep greedy for every uncached (v, net_row, cluster-key)
     triple, grouped by cluster size."""
     todo = [t for t in dict.fromkeys(triples) if t not in cache]
@@ -134,7 +149,8 @@ def _fill_cache(cache: Dict, triples, net, ncfg, prof, B, L) -> None:
     for t in todo:
         by_k.setdefault(len(t[2]), []).append(t)
     for tasks in by_k.values():
-        for t, res in zip(tasks, _greedy_group(tasks, net, ncfg, prof, B, L)):
+        for t, res in zip(tasks, _greedy_group(tasks, net, ncfg, prof, B, L,
+                                               topk=topk)):
             cache[t] = res
 
 
@@ -152,7 +168,8 @@ def _lockstep_gibbs(vs: np.ndarray, net: NetworkState, rows: np.ndarray,
                     rngs: List[np.random.Generator], ncfg: NetworkCfg,
                     prof: CutProfile, B: int, L: int, n_clusters: int,
                     cluster_size: int, iters: int, delta: float,
-                    sizes: Optional[Sequence[int]], track: bool):
+                    sizes: Optional[Sequence[int]], track: bool,
+                    topk: int = 0):
     """R lockstep Gibbs chains (Alg. 4); replica r runs under cut
     ``vs[r]``, network draw ``net.f[rows[r]]``, RNG ``rngs[r]``.
 
@@ -203,7 +220,8 @@ def _lockstep_gibbs(vs: np.ndarray, net: NetworkState, rows: np.ndarray,
             total += lat
         return total
 
-    _fill_cache(cache, seg_triples(D, range(R)), net, ncfg, prof, B, L)
+    _fill_cache(cache, seg_triples(D, range(R)), net, ncfg, prof, B, L,
+                topk=topk)
     X = np.empty((R, N), dtype=np.int64)
     clats = []                       # per-replica cached cluster latencies
     for r in range(R):
@@ -237,7 +255,7 @@ def _lockstep_gibbs(vs: np.ndarray, net: NetworkState, rows: np.ndarray,
                 s, e = segs[mm]
                 trips.append((int(vs[r]), int(rows[r]),
                               tuple(sorted(D_cand[r, s:e].tolist()))))
-        _fill_cache(cache, trips, net, ncfg, prof, B, L)
+        _fill_cache(cache, trips, net, ncfg, prof, B, L, topk=topk)
         cand_lats = []
         for r, m, mp, p, q in props:
             row = list(clats[r])
@@ -288,7 +306,7 @@ def gibbs_clustering_multichain(v: int, net: NetworkState, ncfg: NetworkCfg,
                                 seed: int = 0, chains: int = 1,
                                 track: bool = False,
                                 sizes: Optional[Sequence[int]] = None,
-                                full: bool = False):
+                                full: bool = False, spectrum_topk: int = 0):
     """Alg. 4 run as ``chains`` lockstep Gibbs replicas, returning the
     best-of-R solution.
 
@@ -313,7 +331,7 @@ def gibbs_clustering_multichain(v: int, net: NetworkState, ncfg: NetworkCfg,
     rngs = [_chain_rng(seed, c) for c in range(chains)]
     lats, results, hists = _lockstep_gibbs(
         vs, snet, rows, rngs, ncfg, prof, B, L, n_clusters, cluster_size,
-        iters, delta, sizes, track)
+        iters, delta, sizes, track, topk=spectrum_topk)
     b = int(np.argmin(lats))
     clusters, xs, lat = results[b]
     if full:
@@ -322,6 +340,125 @@ def gibbs_clustering_multichain(v: int, net: NetworkState, ncfg: NetworkCfg,
     if track:
         return clusters, xs, lat, hists
     return clusters, xs, lat
+
+
+# --------------------------------------------------------------------------
+# Population scale: hierarchical two-level clustering
+# --------------------------------------------------------------------------
+
+def _bucket_chain_rng(seed: int, bucket: int, chain: int
+                      ) -> np.random.Generator:
+    """Per-(bucket, chain) RNG streams: bucket 0 reuses the flat
+    ``_chain_rng(seed, c)`` streams — so with a single bucket the
+    hierarchical planner replays ``gibbs_clustering_multichain``
+    bit-for-bit — and bucket b > 0 draws from
+    ``default_rng((seed, 6151, b, c))``, a namespace disjoint from every
+    flat-planner stream (6151 is an arbitrary fixed tag)."""
+    if bucket == 0:
+        return _chain_rng(seed, chain)
+    return np.random.default_rng((int(seed), 6151, int(bucket), int(chain)))
+
+
+@dataclass
+class HierarchicalResult:
+    """Full output of ``hierarchical_gibbs_clustering(full=True)``."""
+    clusters: List[List[int]]            # stitched partition, bucket order
+    xs: List[np.ndarray]                 # its per-cluster allocations
+    latency: float                       # total round latency (eq. 25)
+    buckets: List[np.ndarray]            # global device ids per bucket
+    bucket_latencies: np.ndarray         # (n_buckets,) per-bucket bests
+
+
+def hierarchical_gibbs_clustering(v: int, net: NetworkState,
+                                  ncfg: NetworkCfg, prof: CutProfile,
+                                  B: int, L: int, cluster_size: int,
+                                  iters: int = 1000, delta: float = 1e-4,
+                                  seed: int = 0, chains: int = 1,
+                                  n_buckets: Optional[int] = None,
+                                  bucket_size: Optional[int] = None,
+                                  spectrum_topk: int = 0,
+                                  full: bool = False):
+    """Two-level Alg. 4 for population scale: coarse-bucket the N devices
+    by joint (compute, channel) quantiles (``core.resource.
+    bucket_devices``), run ``chains`` lockstep Gibbs replicas *within*
+    each bucket, and stitch the per-bucket best-of-chains solutions —
+    the bucket-then-solve decomposition of heterogeneous-edge PSL
+    (arXiv:2403.15815). Plan time scales as O(n_buckets) independent
+    bucket solves of bounded size instead of one Gibbs whose per-sweep
+    cost grows with N, and clusters never straddle buckets, so every
+    Alg. 3 run stays at most ``bucket_size`` wide.
+
+    ``n_buckets`` (or ``bucket_size``, ceil(N / bucket_size) buckets;
+    default 320 devices per bucket) sets the coarse level; each bucket is
+    chopped into ``balanced_sizes(n_b, cluster_size)`` clusters.
+    ``spectrum_topk`` additionally prunes the embedded greedy's argmin
+    candidates (``_greedy_group``'s ``topk``). Per-bucket sweeps =
+    ``iters``.
+
+    Exactness fallback (tested): with one bucket the bucketing is the
+    identity, bucket 0's RNG streams are the flat ``_chain_rng`` ones,
+    and the single ``_lockstep_gibbs`` call is argument-identical to
+    ``gibbs_clustering_multichain(..., sizes=balanced_sizes(N, K))`` —
+    clusters, allocations, and latency are bit-identical.
+
+    Buckets group by size into lockstep ``_lockstep_gibbs`` batches (all
+    same-size buckets x chains replicas in one call), so the coarse level
+    adds at most two batched solves, not n_buckets Python-loop solves.
+
+    Returns ``(clusters, xs, latency)`` — global device ids, clusters in
+    bucket order, total = left-to-right sum of per-bucket bests — or a
+    :class:`HierarchicalResult` when ``full=True``."""
+    from repro.sim.controller import balanced_sizes
+
+    N = len(net.f)
+    if n_buckets is None:
+        bs = int(bucket_size) if bucket_size else 320
+        n_buckets = -(-N // bs)
+    buckets = rs.bucket_devices(net, n_buckets)
+    chains = max(1, int(chains))
+    f_all = np.asarray(net.f, dtype=np.float64)
+    r_all = np.asarray(net.rate, dtype=np.float64)
+
+    by_size: Dict[int, List[int]] = {}
+    for b, ids in enumerate(buckets):
+        by_size.setdefault(len(ids), []).append(b)
+
+    bucket_best: Dict[int, Tuple[List[List[int]], List[np.ndarray], float]] \
+        = {}
+    for n_b, bsel in by_size.items():
+        snet = NetworkState(f=np.stack([f_all[buckets[b]] for b in bsel]),
+                            rate=np.stack([r_all[buckets[b]] for b in bsel]))
+        G = len(bsel) * chains
+        vs = np.full(G, v, dtype=np.int64)
+        rows = np.repeat(np.arange(len(bsel), dtype=np.int64), chains)
+        rngs = [_bucket_chain_rng(seed, b, c) for b in bsel
+                for c in range(chains)]
+        sizes = balanced_sizes(n_b, cluster_size)
+        lats, results, _ = _lockstep_gibbs(
+            vs, snet, rows, rngs, ncfg, prof, B, L, len(sizes),
+            max(sizes), iters, delta, sizes, track=False,
+            topk=spectrum_topk)
+        lats = np.asarray(lats, float).reshape(len(bsel), chains)
+        for gb, b in enumerate(bsel):
+            best_c = int(np.argmin(lats[gb]))
+            cl, xs, lat = results[gb * chains + best_c]
+            gid = buckets[b]
+            bucket_best[b] = ([[int(gid[i]) for i in c] for c in cl],
+                              [np.asarray(x) for x in xs], float(lat))
+
+    clusters: List[List[int]] = []
+    xs: List[np.ndarray] = []
+    blats = np.empty(len(buckets))
+    total = 0.0
+    for b in range(len(buckets)):
+        cl, bx, lat = bucket_best[b]
+        clusters.extend(cl)
+        xs.extend(bx)
+        blats[b] = lat
+        total += lat          # left-to-right, as _round_latency_cached
+    if full:
+        return HierarchicalResult(clusters, xs, float(total), buckets, blats)
+    return clusters, xs, float(total)
 
 
 def saa_cut_selection_batched(prof: CutProfile, ncfg: NetworkCfg, B: int,

@@ -29,6 +29,7 @@ from repro.core.channel import NetworkCfg, NetworkState
 from repro.core.latency import CutProfile, cluster_latency
 from repro.sim.batched import (gibbs_clustering_multichain,
                                greedy_spectrum_batched,
+                               hierarchical_gibbs_clustering,
                                saa_cut_selection_batched)
 
 
@@ -176,7 +177,19 @@ class TwoTimescaleController:
         # select_cut's SAA stream (see the offset comment there)
         seed = self.scfg.seed + slot + 53_639
         chains = max(1, self.scfg.gibbs_chains)
-        if chains > 1 and self.spectrum_fn is greedy_spectrum_batched:
+        if (self.scfg.plan_mode == "bucketed"
+                and self.spectrum_fn is greedy_spectrum_batched):
+            # population scale: per-bucket lockstep Gibbs stitched over
+            # coarse (compute, channel) buckets. With n <= bucket_size
+            # there is one bucket and the plan is bit-identical to the
+            # flat multichain plan below (tested)
+            clusters, xs, lat = hierarchical_gibbs_clustering(
+                self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
+                self.scfg.cluster_size, iters=self.scfg.gibbs_iters,
+                seed=seed, chains=chains,
+                bucket_size=self.scfg.bucket_size,
+                spectrum_topk=self.scfg.spectrum_topk)
+        elif chains > 1 and self.spectrum_fn is greedy_spectrum_batched:
             # best-of-R lockstep chains; chain 0 is the single-chain
             # stream, so this only ever improves on the chains=1 plan
             clusters, xs, lat = gibbs_clustering_multichain(

@@ -72,160 +72,21 @@ from jax.experimental import enable_x64
 from repro.configs.base import SimFleetCfg
 from repro.core import latency as lt
 from repro.core.channel import NetworkCfg, NetworkState, device_means
-from repro.core.latency import CutProfile, equal_split_x
+# the jnp cost engine lives in core.latency since the population-scale
+# refactor; re-imported (and re-exported) here for the fleet program and
+# for back-compat with importers of repro.sim.fleet.PartitionBatchJ
+from repro.core.latency import (CutProfile, PartitionBatchJ, _CST_KEYS,
+                                _cluster_latency_j, _sum_left_to_right,
+                                equal_split_x)
 from repro.sim.controller import balanced_sizes
 from repro.sim.dynamics import DynamicsCfg
 
 __all__ = ["PartitionBatchJ", "SimFleetRunner", "fleet_trace_records",
            "recompute_fleet_latencies"]
 
-_CST_KEYS = ("xi_d", "xi_s", "xi_g", "gamma_dF", "gamma_dB",
-             "gamma_sF", "gamma_sB")
 _F_FLOOR = 1e7                      # compute floor, as NetworkProcess
 POLICY_EQUAL, POLICY_GREEDY, POLICY_PROPOSED = 0, 1, 2
 LAYOUT_RANK, LAYOUT_COMPUTE = 0, 1
-
-
-# --------------------------------------------------------------------------
-# jnp cost model — eqs. (15)-(25), operand order of cluster_latency
-# --------------------------------------------------------------------------
-
-def _cluster_latency_j(cst: Dict[str, jnp.ndarray], fd, rd, xs, mask,
-                       csize, *, B: int, L: int, C: int,
-                       f_server_kappa: float, kappa: float,
-                       physical_gradients: bool = False):
-    """Masked jnp port of ``core.latency.cluster_latency`` over (..., K)
-    cluster rows.
-
-    ``cst``: per-cut profile constants, each a leading-axes shape ending
-    in singleton(s) so it broadcasts against the (..., K) per-device
-    terms; ``fd``/``rd``: gathered device compute / subcarrier rate;
-    ``xs``: subcarrier allocation (padded slots must be >= 1); ``mask``:
-    real device slots; ``csize``: real cluster size at the REDUCED rank
-    (broadcastable against the (...,) per-cluster output; 0 = padded
-    cluster -> latency 0). Every expression keeps the operand order of
-    the scalar NumPy path, so values agree to float64 tolerance (only
-    XLA-vs-NumPy ulp effects remain; association is identical)."""
-
-    def red(a):
-        # constants at the post-max rank (drop the singleton K axis)
-        return a[..., 0] if getattr(a, "ndim", 0) else a
-
-    f = fd * kappa
-    xi_g = cst["xi_g"] * (B if physical_gradients else 1.0)
-    tau_b = cst["xi_d"] / (C * rd)                   # (15)
-    tau_d = B * cst["gamma_dF"] / f                  # (16)
-    tau_s = B * cst["xi_s"] / (xs * rd)              # (17)
-    tau_e = csize * B * (red(cst["gamma_sF"]) + red(cst["gamma_sB"])) \
-        / f_server_kappa                             # (18)
-    tau_g = xi_g / (xs * rd)                         # (20)
-    tau_u = B * cst["gamma_dB"] / f                  # (21)
-    tau_t = cst["xi_d"] / (xs * rd)                  # (23)
-
-    def mx(v):
-        return jnp.max(jnp.where(mask, v, -jnp.inf), axis=-1)
-
-    d_S = mx(tau_b + tau_d + tau_s) + tau_e          # (19)
-    d_I = mx(tau_g + tau_u + tau_d + tau_s) + tau_e  # (22)
-    d_E = mx(tau_g + tau_u + tau_t)                  # (24)
-    D = d_S + (L - 1) * d_I + d_E
-    return jnp.where(csize > 0, D, 0.0)
-
-
-def _sum_left_to_right(per_cluster):
-    """(..., M) -> (...,) accumulated m = 0, 1, ... exactly like the
-    Python ``sum`` in ``round_latency`` (padded clusters add exact 0.0,
-    a bitwise no-op)."""
-    total = per_cluster[..., 0]
-    for m in range(1, per_cluster.shape[-1]):
-        total = total + per_cluster[..., m]
-    return total
-
-
-class PartitionBatchJ:
-    """jnp float64 port of ``core.latency.PartitionBatch``: scores R full
-    M-cluster partitions — optionally per-replica cuts and stacked
-    network draws — through :func:`_cluster_latency_j`.
-
-    Same constructor and ``cluster_latencies`` / ``latencies`` contract
-    as the NumPy class (cluster-by-cluster ``sizes`` layout, (R, N)
-    allocations, row broadcasting); values agree with it to tight
-    float64 tolerance on identical inputs (tests/test_simfleet.py pins
-    randomized (v, sizes, draws) grids). The episode-fleet simulator and
-    the rewired fig. 7/8 + table 2 benchmarks share this one cost
-    implementation."""
-
-    def __init__(self, v, net: NetworkState, ncfg: NetworkCfg,
-                 prof: CutProfile, B: int, L: int, sizes: Sequence[int],
-                 device_idx: np.ndarray, net_rows=None,
-                 physical_gradients: bool = False):
-        sizes = np.asarray(sizes, dtype=np.int64)
-        dev = np.asarray(device_idx, dtype=np.int64)
-        if dev.ndim == 1:
-            dev = dev[None, :]
-        assert dev.shape[1] == int(sizes.sum()), \
-            "device_idx must be laid out cluster-by-cluster per `sizes`"
-        self.M, self.Kmax = len(sizes), int(sizes.max())
-        self.N = int(sizes.sum())
-        self.sizes = sizes
-        self.starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
-        self.B, self.L = B, L
-        self.C = ncfg.n_subcarriers
-        self.kappa = float(ncfg.kappa)
-        self.f_server_kappa = ncfg.f_server * ncfg.kappa
-        self.physical = physical_gradients
-
-        v_arr = np.asarray(v)
-        cst = {k: np.asarray(getattr(prof, k), dtype=np.float64)[v_arr - 1]
-               for k in _CST_KEYS}
-        f_all = np.asarray(net.f, dtype=np.float64)
-        r_all = np.asarray(net.rate, dtype=np.float64)
-        if f_all.ndim == 1:
-            fd, rd = f_all[dev], r_all[dev]
-        else:
-            rows = np.asarray(net_rows, dtype=np.int64)[:, None]
-            fd, rd = f_all[rows, dev], r_all[rows, dev]
-
-        with enable_x64():
-            # (R?, M, Kmax) padded views + static slot masks
-            self._mask = jnp.asarray(self._to_slots(
-                np.ones((1, self.N)), fill=0.0) > 0.5)[0]
-            self._csize = jnp.asarray(sizes)
-            self._fd = jnp.asarray(self._to_slots(fd, fill=1.0))
-            self._rd = jnp.asarray(self._to_slots(rd, fill=1.0))
-            self._cst = {k: jnp.asarray(a)[..., None, None] if a.ndim
-                         else jnp.asarray(a) for k, a in cst.items()}
-
-    def _to_slots(self, arr: np.ndarray, fill: float) -> np.ndarray:
-        """(R, N) cluster-by-cluster layout -> (R, M, Kmax) padded."""
-        arr = np.asarray(arr, dtype=np.float64)
-        if arr.ndim == 1:
-            arr = arr[None, :]
-        out = np.full((arr.shape[0], self.M, self.Kmax), fill)
-        for m, (s, k) in enumerate(zip(self.starts, self.sizes)):
-            out[:, m, :k] = arr[:, s:s + k]
-        return out
-
-    def cluster_latencies(self, xs: np.ndarray) -> np.ndarray:
-        """(R, N) allocations -> (R, M) per-cluster latencies D_m."""
-        with enable_x64():
-            x = jnp.asarray(self._to_slots(np.asarray(xs, np.float64),
-                                           fill=1.0))
-            D = _cluster_latency_j(
-                self._cst, self._fd, self._rd, x, self._mask, self._csize,
-                B=self.B, L=self.L, C=self.C,
-                f_server_kappa=self.f_server_kappa, kappa=self.kappa,
-                physical_gradients=self.physical)
-        return np.asarray(D)
-
-    def latencies(self, xs: np.ndarray) -> np.ndarray:
-        """(R, N) allocations -> (R,) round totals (left-to-right cluster
-        accumulation, as ``PartitionBatch.latencies``)."""
-        per = self.cluster_latencies(xs)
-        total = per[:, 0].copy()
-        for m in range(1, self.M):
-            total = total + per[:, m]
-        return total
 
 
 # --------------------------------------------------------------------------
@@ -270,7 +131,7 @@ def _equal_xs(csize, mask, C: int):
 
 
 def _greedy_xs(cst_b, fd, rd, mask, csize, *, C: int, B: int, L: int,
-               f_server_kappa: float, kappa: float):
+               f_server_kappa: float, kappa: float, chunk: int = 0):
     """Lockstep greedy Alg. 3 over every (episode, cluster) slot: start
     at one subcarrier per device, then C - K_m gated steps each granting
     one subcarrier to the argmin-latency candidate — candidate values
@@ -279,8 +140,35 @@ def _greedy_xs(cst_b, fd, rd, mask, csize, *, C: int, B: int, L: int,
 
     ``cst_b``: constants broadcastable against the (E, M, Kc, K)
     candidate tensor. Returns (E, M, K) int allocations summing to C on
-    every real cluster."""
+    every real cluster.
+
+    ``chunk`` > 0 streams the cluster axis through ``lax.map`` in tiles
+    of that many clusters, bounding the (E, M, Kc, K) candidate tensor
+    at (E, chunk, Kc, K). Padded clusters (csize 0, mask all-False,
+    fd/rd 1) take no greedy steps, so real clusters' allocations are
+    unchanged — per-cluster decisions are independent of the batch they
+    ride in."""
     E, M, K = fd.shape
+    if chunk and chunk < M:
+        nch = -(-M // chunk)
+        pad = nch * chunk - M
+
+        def tiles(a, fill):
+            if pad:
+                pads = jnp.full((E, pad) + a.shape[2:], fill, a.dtype)
+                a = jnp.concatenate([a, pads], axis=1)
+            a = a.reshape((E, nch, chunk) + a.shape[2:])
+            return jnp.moveaxis(a, 1, 0)         # (nch, E, chunk, ...)
+
+        def one(t):
+            fdc, rdc, mkc, csc = t
+            return _greedy_xs(cst_b, fdc, rdc, mkc, csc, C=C, B=B, L=L,
+                              f_server_kappa=f_server_kappa, kappa=kappa)
+
+        X = jax.lax.map(one, (tiles(fd, 1.0), tiles(rd, 1.0),
+                              tiles(mask, False), tiles(csize, 0)))
+        return jnp.moveaxis(X, 0, 1).reshape(E, nch * chunk, K)[:, :M]
+
     eye = jnp.eye(K, dtype=jnp.int32)
     fd4, rd4 = fd[:, :, None, :], rd[:, :, None, :]
     mask4 = mask[:, :, None, :]
@@ -307,7 +195,7 @@ def _greedy_xs(cst_b, fd, rd, mask, csize, *, C: int, B: int, L: int,
 
 def _gibbs_cells(cst, fG, rG, activeG, KtgtG, keyG, propG, *, M: int,
                  K: int, C: int, B: int, L: int, f_server_kappa: float,
-                 kappa: float, delta: float):
+                 kappa: float, delta: float, chunk: int = 0):
     """G independent Gibbs chains (Alg. 4 with embedded Alg. 3) in
     lockstep — the in-jit mirror of ``core.resource.gibbs_clustering``
     on pre-drawn randomness (its ``draws=`` path), decision-for-decision
@@ -338,7 +226,7 @@ def _gibbs_cells(cst, fG, rG, activeG, KtgtG, keyG, propG, *, M: int,
     dev, mask, csize = lay(order, n_act, KtgtG)
     fd = fG[g_idx, dev]
     rd = rG[g_idx, dev]
-    xs = _greedy_xs(cst4, fd, rd, mask, csize, **kw)
+    xs = _greedy_xs(cst4, fd, rd, mask, csize, chunk=chunk, **kw)
     lat_m = _cluster_latency_j(cst3, fd, rd, xs, mask, csize, **kw)
     cur = _sum_left_to_right(lat_m)
 
@@ -421,7 +309,7 @@ def _simulate(data, *, B: int, L: int, C: int, M: int, K: int, T: int,
               gibbs_delta: float = 1e-4, p_depart: float = 0.0,
               p_arrive: float = 0.0, min_floor: int = 0,
               epoch_len: int = 1, saa_cuts: tuple = (),
-              n_reserve: int = 0):
+              n_reserve: int = 0, cost_chunk: int = 0):
     """The whole E-episode, T-slot simulation as one scan.
 
     ``data``: one pytree of episode arrays — means/innovations
@@ -456,7 +344,7 @@ def _simulate(data, *, B: int, L: int, C: int, M: int, K: int, T: int,
     use_arr = p_arrive > 0.0
     use_saa = bool(saa_cuts) and P > 0
     gkw = dict(M=M, K=K, C=C, B=B, L=L, f_server_kappa=f_server_kappa,
-               kappa=kappa, delta=gibbs_delta)
+               kappa=kappa, delta=gibbs_delta, chunk=cost_chunk)
     # rows whose repair re-runs the greedy Alg. 3 (vs equal split)
     grr = tuple(sorted(set(greedy_rows) | set(proposed_rows)))
     gri = jnp.asarray(grr, dtype=jnp.int32)
@@ -577,7 +465,8 @@ def _simulate(data, *, B: int, L: int, C: int, M: int, K: int, T: int,
             cst4g = {k: a[gi][:, None, None, None] for k, a in cstE.items()}
             xs = xs.at[gi].set(_greedy_xs(
                 cst4g, fd[gi], rd[gi], mask[gi], csize[gi], B=B, L=L,
-                C=C, f_server_kappa=f_server_kappa, kappa=kappa))
+                C=C, f_server_kappa=f_server_kappa, kappa=kappa,
+                chunk=cost_chunk))
         if P:
             xs = xs.at[pi].set(xs_p)
 
@@ -599,7 +488,7 @@ def _simulate(data, *, B: int, L: int, C: int, M: int, K: int, T: int,
                 xs_rep = xs_rep.at[gri].set(_greedy_xs(
                     cst4r, fd[gri], rd[gri], mask[gri], csize[gri],
                     B=B, L=L, C=C, f_server_kappa=f_server_kappa,
-                    kappa=kappa))
+                    kappa=kappa, chunk=cost_chunk))
             xs = jnp.where(affected[:, :, None], xs_rep, xs)
 
         clat = _cluster_latency_j(cst3, fd, rd, xs, mask, csize, B=B,
@@ -942,7 +831,7 @@ class SimFleetRunner:
             p_depart=float(dcfg.p_depart), p_arrive=float(dcfg.p_arrive),
             min_floor=self._min_floor, epoch_len=int(fcfg.epoch_len),
             saa_cuts=tuple(fcfg.saa_cuts) if use_saa else (),
-            n_reserve=n_res))
+            n_reserve=n_res, cost_chunk=int(fcfg.cost_chunk)))
 
     # -- batched dispatch -----------------------------------------------------
 
