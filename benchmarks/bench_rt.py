@@ -43,7 +43,7 @@ def _arm_cfg(cluster_size: int, rounds: int, delay_scale: float) -> RTConfig:
                     rounds=rounds, local_epochs=1, batch=8,
                     n_train=600, n_test=64, samples_per_device=80,
                     n_subcarriers=N_DEVICES, seed=0,
-                    phase_timeout_s=120.0, rpc_timeout_s=30.0,
+                    phase_timeout_s=180.0, rpc_timeout_s=30.0,
                     delay_scale=delay_scale)
 
 
@@ -58,7 +58,7 @@ def main(quick: bool = True):
     # price the cpsl arm's plan once to pick a delay scale that makes
     # the injected wireless schedule dominate compute/IPC noise
     probe = Orchestrator(_arm_cfg(2, rounds, 0.0))
-    lat_cpsl = probe.plan_round(0).latency
+    lat_cpsl = probe.plan_round(0)[0].latency
     probe.stop()
     scale = target / lat_cpsl
     print(f"predicted cpsl round latency {lat_cpsl:.3e}s -> "

@@ -1,15 +1,27 @@
 """Fault-tolerant checkpointing: msgpack+zstd payloads, atomic renames,
-async save thread, keep-k GC, and *elastic* restore (arrays are stored as
-host numpy and re-placed under whatever mesh/sharding the restoring job
-uses — a checkpoint written on one topology restores on another).
+async save thread, keep-k GC, per-payload integrity checksums, and
+*elastic* restore (arrays are stored as host numpy and re-placed under
+whatever mesh/sharding the restoring job uses — a checkpoint written on
+one topology restores on another).
+
+Integrity: every file is framed ``b"RCK1" + crc32(payload) + payload``
+and the checksum is verified on restore. A latest checkpoint that is
+corrupted or truncated (half-written by a crash that beat the atomic
+rename, bit-rot, a torn copy) makes ``restore(step=None)`` fall back to
+the previous keep-k entry with a ``CheckpointCorrupt`` warning instead
+of crashing the resume — an explicit ``step=`` still raises, because
+the caller asked for that file specifically. Unframed legacy files are
+read without verification.
 """
 from __future__ import annotations
 
 import os
 import re
 import shutil
+import struct
 import threading
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -24,6 +36,36 @@ except ImportError:          # optional: fall back to stdlib zlib
 import zlib
 
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+_CKPT_MAGIC = b"RCK1"              # framed: magic + u32 crc32 + payload
+_CKPT_HDR = struct.Struct(">4sI")
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint file failed its integrity check (bad checksum,
+    truncated header, undecodable payload)."""
+
+
+def frame_blob(payload: bytes) -> bytes:
+    return _CKPT_HDR.pack(_CKPT_MAGIC, zlib.crc32(payload)) + payload
+
+
+def unframe_blob(blob: bytes, name: str = "checkpoint") -> bytes:
+    """Verify and strip the integrity frame. Unframed (legacy) blobs
+    pass through unverified; framed blobs with a wrong checksum or a
+    truncated body raise ``CheckpointCorrupt``."""
+    if blob[:4] != _CKPT_MAGIC:
+        return blob                # legacy file, no checksum to check
+    if len(blob) < _CKPT_HDR.size:
+        raise CheckpointCorrupt(f"{name}: truncated header "
+                                f"({len(blob)} bytes)")
+    _, crc = _CKPT_HDR.unpack(blob[:_CKPT_HDR.size])
+    payload = blob[_CKPT_HDR.size:]
+    got = zlib.crc32(payload)
+    if got != crc:
+        raise CheckpointCorrupt(
+            f"{name}: checksum mismatch (stored 0x{crc:08x}, computed "
+            f"0x{got:08x}) — file is corrupted or torn")
+    return payload
 
 
 def _compress(raw: bytes) -> bytes:
@@ -104,6 +146,7 @@ class Checkpointer:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self.restored_step: Optional[int] = None  # set by restore(step=None)
         os.makedirs(directory, exist_ok=True)
 
     # -- save ----------------------------------------------------------------
@@ -112,7 +155,7 @@ class Checkpointer:
         final = os.path.join(self.dir, f"ckpt_{step:010d}")
         tmp = final + ".tmp"
         with open(tmp, "wb") as f:
-            f.write(blob)
+            f.write(frame_blob(blob))
             f.flush()
             os.fsync(f.fileno())
         os.rename(tmp, final)          # atomic commit
@@ -147,13 +190,48 @@ class Checkpointer:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, target, step: Optional[int] = None):
-        step = self.latest_step() if step is None else step
-        if step is None:
-            return None
-        with open(os.path.join(self.dir, f"ckpt_{step:010d}"), "rb") as f:
+    def _load(self, target, step: int):
+        """Load + verify one checkpoint file; every failure mode
+        (truncation, bad checksum, undecodable payload) surfaces as
+        ``CheckpointCorrupt``."""
+        name = f"ckpt_{step:010d}"
+        with open(os.path.join(self.dir, name), "rb") as f:
             blob = f.read()
-        return deserialize(blob, target)
+        payload = unframe_blob(blob, name=name)
+        try:
+            return deserialize(payload, target)
+        except KeyError:
+            raise                      # structure mismatch, not corruption
+        except Exception as e:
+            raise CheckpointCorrupt(f"{name}: undecodable payload: {e}") \
+                from e
+
+    def restore(self, target, step: Optional[int] = None):
+        """Restore ``step`` (explicit steps fail loudly on corruption).
+        With ``step=None``, walk back from the latest entry: a corrupted
+        or truncated checkpoint is skipped with a warning and the
+        previous keep-k entry is restored instead — resumes survive a
+        damaged last save. Raises only when every entry is corrupt."""
+        if step is not None:
+            return self._load(target, step)
+        steps = self.steps()
+        if not steps:
+            return None
+        err: Optional[CheckpointCorrupt] = None
+        for s in reversed(steps):
+            try:
+                out = self._load(target, s)
+            except CheckpointCorrupt as e:
+                warnings.warn(
+                    f"{e}; falling back to the previous checkpoint",
+                    RuntimeWarning)
+                err = e
+                continue
+            self.restored_step = s
+            return out
+        raise CheckpointCorrupt(
+            f"all {len(steps)} checkpoints in {self.dir} are corrupt"
+        ) from err
 
     def _gc(self):
         steps = self.steps()

@@ -16,17 +16,26 @@ Modules:
   qos           measured per-device phase timings (telemetry schema)
   device        the device worker process (``device_main``)
   server        server-side numerics + straggler drop-or-wait policy
-  orchestrator  spawn/plan/drive/collect (``run_loopback``)
+  orchestrator  spawn/plan/drive/collect (``run_loopback``), elastic
+                recovery (``run_elastic``: WAL crash-resume, worker
+                respawn/rejoin, roster-aware replanning)
   crossval      measured vs sim-predicted round latency, side by side
 
 Correctness contract: a loopback run with 2 clusters x 2 devices
 reproduces the in-process looped ``CPSL.run_round`` bit-exactly (same
 rng streams, same batch index tables) — tests/test_rt_loopback.py.
+Recovery contract: a chaos run (seeded worker SIGKILLs + server
+SIGKILLs, ``faults.chaos_schedule``) that recovers losslessly converges
+to the SAME final params bit-exactly — tests/test_rt_recovery.py.
 """
-from repro.rt.faults import FaultInjector, FaultRule, wireless_delay_rules
-from repro.rt.orchestrator import Orchestrator, RTConfig, run_loopback
+from repro.rt.faults import (ChaosPlan, FaultInjector, FaultRule,
+                             chaos_schedule, wireless_delay_rules)
+from repro.rt.orchestrator import (Orchestrator, RTConfig,
+                                   loopback_reference, run_elastic,
+                                   run_loopback)
 from repro.rt.protocol import MsgType, ProtocolError
 
 __all__ = ["FaultInjector", "FaultRule", "wireless_delay_rules",
-           "Orchestrator", "RTConfig", "run_loopback", "MsgType",
-           "ProtocolError"]
+           "ChaosPlan", "chaos_schedule",
+           "Orchestrator", "RTConfig", "run_loopback", "run_elastic",
+           "loopback_reference", "MsgType", "ProtocolError"]

@@ -25,6 +25,18 @@ Robustness: an ERROR reply (server dropped us as a straggler) or a new
 CLUSTER_START mid-RPC aborts the current cluster and returns to the
 main loop; SIGTERM (``repro.lifecycle.GracefulStop``) finishes the
 in-flight RPC, sends BYE, and exits cleanly.
+
+Elastic recovery: with ``reconnect`` enabled, losing the server
+connection (server crash, not SHUTDOWN) does not end the worker — it
+re-dials the server port with backoff and re-handshakes with REJOIN
+instead of REGISTER, because its model/jits are already built; the
+REJOIN_ACK tells it the committed round the resumed run continues
+from, and it reports READY immediately (no rebuild, no warmup).
+Fault rules are filtered by the worker's *incarnation* (respawn count,
+passed by the orchestrator), so one-shot chaos faults don't re-fire in
+a kill/respawn loop. RPC retry backoff is capped
+(``lifecycle.retry_sleeps``) and the total retry budget is validated
+against the server's straggler deadline at config time.
 """
 from __future__ import annotations
 
@@ -35,7 +47,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.lifecycle import GracefulStop
+from repro.lifecycle import Backoff, GracefulStop, retry_sleeps
 from repro.rt import protocol as pr
 from repro.rt.faults import FaultInjector, FaultRule, InjectedDisconnect
 from repro.rt.protocol import MsgType
@@ -83,8 +95,11 @@ class DeviceWorker:
     def __init__(self, cfg: dict):
         self.cfg = cfg
         self.gid = int(cfg["device"])
+        self.incarnation = int(cfg.get("incarnation", 0))
         self.injector = FaultInjector(
-            [FaultRule.from_dict(d) for d in cfg.get("faults", [])])
+            [r for r in (FaultRule.from_dict(d)
+                         for d in cfg.get("faults", []))
+             if r.active_in(self.incarnation)])
         self.stop = GracefulStop().install()
         self.pending = deque()
         self.qos = QoSMonitor(device=self.gid)
@@ -144,13 +159,15 @@ class DeviceWorker:
 
     def _start_heartbeat(self):
         interval = self.cfg.get("heartbeat_s", 0.5)
+        ch = self.ch     # bind THIS channel: after a reconnect the old
+                         # thread dies on the closed socket instead of
+                         # silently adopting the new one
 
         def hb():
             while not self._hb_stop.wait(interval):
                 try:
-                    self.ch.send(MsgType.HEARTBEAT,
-                                 {"device": self.gid,
-                                  "t": time.monotonic()})
+                    ch.send(MsgType.HEARTBEAT,
+                            {"device": self.gid, "t": time.monotonic()})
                 except Exception:
                     return
 
@@ -166,10 +183,11 @@ class DeviceWorker:
         cfg = self.cfg
         timeout = cfg.get("rpc_timeout_s", 5.0)
         retries = int(cfg.get("retries", 3))
-        backoff = cfg.get("backoff_s", 0.25)
+        sleeps = retry_sleeps(retries, cfg.get("backoff_s", 0.25),
+                              cap=cfg.get("backoff_max_s", 2.0))
         for attempt in range(retries + 1):
             if attempt:
-                time.sleep(backoff * (2 ** (attempt - 1)))
+                time.sleep(sleeps[attempt - 1])
             self.ch.send(send_type, dict(payload, attempt=attempt))
             deadline = time.monotonic() + timeout
             while True:
@@ -243,35 +261,99 @@ class DeviceWorker:
 
     # -- main loop -------------------------------------------------------
 
+    def _serve(self):
+        """Dispatch loop on the current channel; returns on clean
+        SHUTDOWN (or triggered stop), raises on connection loss."""
+        while not self.stop:
+            if self.pending:
+                mtype, msg = self.pending.popleft()
+            else:
+                try:
+                    mtype, msg = self.ch.recv(timeout=0.5)
+                except RpcTimeout:
+                    continue
+            if mtype == MsgType.SHUTDOWN:
+                self.ch.send(MsgType.BYE, {"device": self.gid})
+                return
+            if mtype == MsgType.CLUSTER_START:
+                try:
+                    self._run_cluster(msg)
+                except _Aborted:
+                    self.qos.drain()   # cluster abandoned: QoS stale
+            # anything else (stale GRAD/ACK/ERROR) is ignored here
+
+    def _rejoin(self) -> bool:
+        """Re-dial the server after losing it and re-handshake with
+        REJOIN (model/jits already built, so no PLAN rebuild and no
+        warmup — READY follows immediately). The WHOLE handshake is
+        retried with capped backoff until ``reconnect_timeout_s``
+        elapses, not just the TCP connect: racing a dying server's
+        socket teardown can land a connect in a dead listener's backlog
+        (accepted, then RST on first read), and a restarted server may
+        be mid-bind — both are transient. Returns False only when the
+        budget is exhausted — the worker then exits like before."""
+        cfg = self.cfg
+        self.pending.clear()
+        self._round = None
+        self.qos.drain()               # pre-crash QoS is unmatchable now
+        deadline = time.monotonic() + cfg.get("reconnect_timeout_s", 30.0)
+        backoff = Backoff(cfg.get("backoff_s", 0.25),
+                          cap=cfg.get("backoff_max_s", 2.0))
+        while not self.stop:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                return False
+            if self._rejoin_once(left):
+                return True
+            time.sleep(min(backoff.next(),
+                           max(0.0, deadline - time.monotonic())))
+        return False
+
+    def _rejoin_once(self, budget_s: float) -> bool:
+        """One rejoin attempt: connect, REJOIN, await REJOIN_ACK (or a
+        PLAN — server wants a full rebuild), READY. Any transport or
+        protocol failure just fails this attempt."""
+        cfg = self.cfg
+        try:
+            sock = connect_with_retry(cfg["host"], cfg["port"], budget_s)
+            self.ch = Channel(sock, self.injector,
+                              round_fn=lambda: self._round)
+            self.ch.send(MsgType.REJOIN, {"device": self.gid,
+                                          "incarnation": self.incarnation})
+            mtype, msg = self.ch.recv(
+                timeout=min(budget_s, cfg.get("plan_timeout_s", 120.0)))
+            if mtype == MsgType.PLAN:
+                self._build(msg)       # server asked for a full rebuild
+            elif mtype != MsgType.REJOIN_ACK:
+                return False
+            self.ch.send(MsgType.READY, {"device": self.gid})
+        except (pr.ProtocolError, RpcTimeout, OSError):
+            return False
+        self._start_heartbeat()
+        return True
+
     def run(self):
         plan = self._connect_and_plan()
         self._build(plan)
         self.ch.send(MsgType.READY, {"device": self.gid})
         self._start_heartbeat()
         try:
-            while not self.stop:
-                if self.pending:
-                    mtype, msg = self.pending.popleft()
-                else:
-                    try:
-                        mtype, msg = self.ch.recv(timeout=0.5)
-                    except RpcTimeout:
-                        continue
-                if mtype == MsgType.SHUTDOWN:
-                    self.ch.send(MsgType.BYE, {"device": self.gid})
-                    return
-                if mtype == MsgType.CLUSTER_START:
-                    try:
-                        self._run_cluster(msg)
-                    except _Aborted:
-                        self.qos.drain()   # cluster abandoned: QoS stale
-                # anything else (stale GRAD/ACK/ERROR) is ignored here
-        except (pr.ConnectionClosed, pr.TruncatedFrame,
-                InjectedDisconnect, OSError):
-            return
+            while True:
+                try:
+                    self._serve()
+                    return             # SHUTDOWN / stop: clean exit
+                except (pr.ConnectionClosed, pr.TruncatedFrame,
+                        InjectedDisconnect, OSError):
+                    if not self.cfg.get("reconnect", False) or self.stop:
+                        return
+                    if not self._rejoin():
+                        return
         finally:
             self._hb_stop.set()
-            self.ch.close()
+            try:
+                self.ch.close()
+            except Exception:
+                pass
 
 
 def device_main(cfg: dict):

@@ -14,6 +14,19 @@ Kinds:
                device failure; exercises straggler drop + masked loss)
   slow         sleep ``delay_s`` before the device-side forward pass
                (slow-device emulation; exercises drop-or-wait policy)
+  kill         SIGKILL the worker's own process on the matched send —
+               a real, deterministic mid-round crash (no cleanup, no
+               BYE; exercises respawn + lossless cluster retry)
+
+Rules are per-process state, so a respawned worker would replay its
+rules from scratch — ``incarnations`` scopes a rule to specific process
+incarnations (the orchestrator passes the respawn count to each worker),
+so a one-shot chaos kill doesn't re-fire forever in a kill/respawn loop.
+
+``chaos_schedule`` draws a *seeded* chaos plan — worker SIGKILLs
+mid-round, server SIGKILLs at round boundaries, and socket blackhole
+windows (every send of a round swallowed) — as plain FaultRule /
+round-list state, so a chaos run is exactly reproducible from its seed.
 
 ``wireless_delay_rules`` maps a sim ``Plan`` + ``NetworkState`` onto
 per-device delay rules priced by the eq. 15-25 cost model, so loopback
@@ -40,12 +53,15 @@ class InjectedDisconnect(RuntimeError):
 
 @dataclass
 class FaultRule:
-    kind: str                                 # delay | drop | disconnect | slow
+    kind: str                    # delay | drop | disconnect | slow | kill
     delay_s: float = 0.0
     msg_types: Optional[Tuple[int, ...]] = None   # None = any message
     rounds: Optional[Tuple[int, ...]] = None      # None = any round
     times: Optional[int] = None               # max firings; None = unlimited
     after: int = 0                            # skip this many matches first
+    incarnations: Optional[Tuple[int, ...]] = None  # process respawn counts
+                                              # the rule is active in;
+                                              # None = every incarnation
     hits: int = field(default=0, compare=False)   # match counter (state)
 
     def to_dict(self) -> dict:
@@ -54,15 +70,21 @@ class FaultRule:
                               else [int(t) for t in self.msg_types]),
                 "rounds": (None if self.rounds is None
                            else [int(r) for r in self.rounds]),
-                "times": self.times, "after": self.after}
+                "times": self.times, "after": self.after,
+                "incarnations": (None if self.incarnations is None
+                                 else [int(i) for i in self.incarnations])}
 
     @classmethod
     def from_dict(cls, d: dict) -> "FaultRule":
         kw = dict(d)
-        for k in ("msg_types", "rounds"):
+        for k in ("msg_types", "rounds", "incarnations"):
             if kw.get(k) is not None:
                 kw[k] = tuple(kw[k])
         return cls(**kw)
+
+    def active_in(self, incarnation: int) -> bool:
+        return (self.incarnations is None
+                or int(incarnation) in self.incarnations)
 
     def _fire(self) -> bool:
         """Count a match; True when this occurrence is inside the
@@ -114,6 +136,70 @@ class FaultInjector:
         d = self.compute_delay(rnd)
         if d > 0:
             time.sleep(d)
+
+
+@dataclass
+class ChaosPlan:
+    """One seeded chaos schedule, in plain replayable state: per-device
+    fault rules (worker SIGKILLs, blackhole windows) + the round
+    boundaries after which the server SIGKILLs itself, plus a JSONable
+    event list for artifacts/logs."""
+    seed: int
+    worker_faults: Dict[int, List[FaultRule]]
+    server_kill_rounds: Tuple[int, ...]
+    events: List[dict]
+
+    def to_dict(self) -> dict:
+        return {"seed": self.seed,
+                "server_kill_rounds": [int(r) for r in
+                                       self.server_kill_rounds],
+                "events": self.events}
+
+
+def chaos_schedule(seed: int, rounds: int, n_devices: int,
+                   kill_workers: int = 1, kill_server: int = 1,
+                   blackholes: int = 0) -> ChaosPlan:
+    """Draw a deterministic chaos schedule from ``seed``.
+
+    * ``kill_workers`` worker SIGKILLs: each picks a device and a round
+      and kills the worker process on its first SMASHED or AGG send of
+      that round (``incarnations=(0,)`` so the respawned process does
+      not re-fire while retrying the same round);
+    * ``kill_server`` server SIGKILLs at distinct round *boundaries*
+      (after the WAL commit of the chosen round, never after the last
+      round — that boundary has nothing left to recover);
+    * ``blackholes`` per-device one-round windows in which every
+      outgoing frame (uploads *and* heartbeats) is swallowed — the
+      device is straggler-dropped for that round and rejoins at the
+      next boundary.
+    """
+    rng = np.random.default_rng(seed)
+    worker_faults: Dict[int, List[FaultRule]] = {}
+    events: List[dict] = []
+    for _ in range(kill_workers):
+        gid = int(rng.integers(n_devices))
+        rnd = int(rng.integers(rounds))
+        mtype = int(MsgType.SMASHED if rng.random() < 0.5 else MsgType.AGG)
+        worker_faults.setdefault(gid, []).append(
+            FaultRule("kill", msg_types=(mtype,), rounds=(rnd,), times=1,
+                      incarnations=(0,)))
+        events.append({"kind": "kill_worker", "device": gid, "round": rnd,
+                       "on": MsgType(mtype).name})
+    kill_rounds: List[int] = []
+    eligible = list(range(max(0, rounds - 1)))
+    for _ in range(min(kill_server, len(eligible))):
+        rnd = eligible.pop(int(rng.integers(len(eligible))))
+        kill_rounds.append(rnd)
+        events.append({"kind": "kill_server", "round": rnd})
+    for _ in range(blackholes):
+        gid = int(rng.integers(n_devices))
+        rnd = int(rng.integers(rounds))
+        worker_faults.setdefault(gid, []).append(
+            FaultRule("drop", rounds=(rnd,)))
+        events.append({"kind": "blackhole", "device": gid, "round": rnd})
+    return ChaosPlan(seed=seed, worker_faults=worker_faults,
+                     server_kill_rounds=tuple(sorted(kill_rounds)),
+                     events=events)
 
 
 def wireless_delay_rules(plan, net, ncfg, prof, B: int,

@@ -1,10 +1,10 @@
-"""Deployment orchestrator: bind, spawn, plan, run, tear down.
+"""Deployment orchestrator: bind, spawn, plan, run, recover, tear down.
 
 ``Orchestrator`` stands a full CPSL deployment up on localhost: it binds
-an ephemeral TCP port, spawns ``n_devices`` worker processes
-(``rt.device.device_main`` via the 'spawn' context — workers build their
-own jax), handshakes (REGISTER -> PLAN -> READY), and then drives
-``rounds`` CPSL rounds through ``rt.server.RTServer``.
+a TCP port, spawns ``n_devices`` worker processes (``rt.device.
+device_main`` via the 'spawn' context — workers build their own jax),
+handshakes (REGISTER -> PLAN -> READY), and then drives ``rounds`` CPSL
+rounds through ``rt.server.RTServer``.
 
 Resource plans come from the SAME machinery the simulator uses:
 
@@ -24,23 +24,53 @@ measured ``wall_s`` — the pairing ``rt.crossval`` consumes. With
 ``delay_scale > 0`` the priced per-device times are also *injected* as
 send delays (``faults.wireless_delay_rules``), so measured wall-clock
 actually exhibits the wireless schedule instead of just predicting it.
+
+Elastic recovery (everything off by default — legacy semantics intact):
+
+  * a *membership thread* owns the listener for the whole run: it
+    handshakes late REGISTERs and REJOINs (a crashed-and-restarted
+    worker, or a worker that outlived a crashed server), monitors the
+    worker processes and — with ``respawn`` — respawns dead ones with
+    capped exponential backoff (``lifecycle.Backoff``), bumping the
+    worker's *incarnation* so one-shot chaos faults don't re-fire;
+  * ``arrivals={gid: round}`` holds a device out of the initial roster
+    and spawns it one round before its entry boundary; planning is
+    roster-aware (the network snapshot is sliced to the live roster),
+    so the controller re-plans the layout when the roster grows;
+  * ``wal_dir`` gives the server a write-ahead ``Checkpointer``:
+    every round boundary commits {state, round}, and a restarted
+    orchestrator (``resume_from=``) adopts the last committed record,
+    truncates the (fsync'd) trace back to it, re-handshakes surviving
+    workers via REJOIN, and continues — bit-exactly, because worker
+    state between clusters is entirely derived from what the server
+    ships (CLUSTER_START params + deterministic batch keys);
+  * ``run_elastic`` supervises the whole thing from a parent process:
+    it pins a concrete port, runs the orchestrator as a subprocess,
+    restarts it with ``resume_from`` whenever it dies (e.g. the seeded
+    ``chaos_kill_server`` SIGKILL after a commit), and reads the final
+    state back from the WAL.
 """
 from __future__ import annotations
 
+import dataclasses
 import multiprocessing as mp
+import os
+import signal
 import socket
+import threading
 import time
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.lifecycle import Backoff, retry_budget_s
 from repro.rt.device import build_shards, device_main
 from repro.rt.faults import FaultRule, wireless_delay_rules
 from repro.rt.protocol import MsgType
 from repro.rt.server import RTServer
 from repro.rt.transport import Channel
-from repro.telemetry import TraceWriter
+from repro.telemetry import TraceWriter, load_trace
 
 
 @dataclass
@@ -72,6 +102,7 @@ class RTConfig:
     rpc_timeout_s: float = 5.0
     retries: int = 3
     backoff_s: float = 0.25
+    backoff_max_s: float = 2.0       # cap on every retry/backoff sleep
     phase_timeout_s: float = 30.0
     straggler_policy: str = "drop"   # drop | wait  (see rt.server)
     heartbeat_s: float = 0.5
@@ -87,6 +118,20 @@ class RTConfig:
     faults: Dict[int, List] = field(default_factory=dict)
     delay_scale: float = 0.0         # >0: inject eq. 15-25 delays, scaled
     trace_path: Optional[str] = None
+    # elastic recovery (see module docstring; all off by default)
+    wal_dir: Optional[str] = None    # round-boundary WAL (crash-resume)
+    wal_keep: int = 3
+    respawn: bool = False            # respawn dead worker processes
+    reconnect: bool = False          # workers re-dial a restarted server
+    cluster_retries: int = 0         # lossless cluster retries on death
+    rejoin_timeout_s: float = 60.0   # server-side wait for a comeback
+    reconnect_timeout_s: float = 60.0  # worker-side re-dial budget
+    rejoin_grace_s: float = 5.0      # resume: let orphans REJOIN before
+                                     # respawning replacements
+    respawn_backoff_s: float = 0.25
+    arrivals: Dict[int, int] = field(default_factory=dict)  # gid -> round
+    chaos_kill_server: Tuple[int, ...] = ()  # SIGKILL self after these
+                                             # rounds commit (chaos)
 
     @property
     def n_clusters(self) -> int:
@@ -110,15 +155,61 @@ class RTConfig:
                 "classes_per_device": self.classes_per_device,
                 "samples_per_device": self.samples_per_device}
 
+    def validate(self) -> "RTConfig":
+        """Refuse timeout geometries that silently disagree: the device
+        RPC retry budget (``lifecycle.retry_budget_s``) must stay under
+        the server's phase deadline, or the server drops a device that
+        is still faithfully retrying."""
+        budget = retry_budget_s(self.rpc_timeout_s, self.retries,
+                                self.backoff_s, self.backoff_max_s)
+        if budget >= self.phase_timeout_s:
+            raise ValueError(
+                f"device RPC retry budget {budget:.2f}s "
+                f"({self.retries + 1} reply waits of {self.rpc_timeout_s}s "
+                f"+ capped backoff) >= phase_timeout_s="
+                f"{self.phase_timeout_s}s: the server would drop a device "
+                f"that is still retrying — raise phase_timeout_s or lower "
+                f"retries/rpc_timeout_s/backoff_s")
+        for gid, rnd in (self.arrivals or {}).items():
+            if not (0 <= int(gid) < self.n_devices):
+                raise ValueError(f"arrivals: unknown device {gid}")
+            if not (0 <= int(rnd) <= self.rounds):
+                raise ValueError(
+                    f"arrivals[{gid}]={rnd} outside [0, rounds]")
+        return self
+
 
 class Orchestrator:
-    def __init__(self, cfg: RTConfig):
-        self.cfg = cfg
+    def __init__(self, cfg: RTConfig, resume_from: Optional[str] = None,
+                 incarnation_base: int = 0):
+        """``resume_from`` names a WAL directory written by a previous
+        (crashed) run of the same config — the orchestrator adopts its
+        last committed round instead of starting fresh.
+        ``incarnation_base`` floors the worker incarnation counter so
+        respawns across server restarts keep advancing it (one-shot
+        chaos faults are scoped by incarnation)."""
+        self.cfg = cfg.validate()
+        self._resume_from = resume_from
+        self._inc_base = int(incarnation_base)
         self.listener: Optional[socket.socket] = None
+        self.port: Optional[int] = None
         self.procs: List[mp.Process] = []
         self.server: Optional[RTServer] = None
-        self.writer = TraceWriter(cfg.trace_path, fresh=True)
+        self.writer = TraceWriter(cfg.trace_path,
+                                  fresh=(resume_from is None),
+                                  fsync=cfg.wal_dir is not None)
         self.metrics: List[dict] = []
+        self.start_round = 0
+        self._next_round = 0
+        self._ctx = mp.get_context("spawn")  # workers re-init jax cleanly
+        self._spawned: Dict[int, mp.Process] = {}
+        self._incarnations: Dict[int, int] = {}
+        self._respawn_at: Dict[int, float] = {}
+        self._backoffs: Dict[int, Backoff] = {}
+        self._rostered: Set[int] = set()
+        self._arrival_waited: Set[int] = set()
+        self._mem_stop = threading.Event()
+        self._mem_thread: Optional[threading.Thread] = None
 
         from repro.core.channel import device_means, sample_network
         from repro.core.channel import NetworkCfg
@@ -148,22 +239,35 @@ class Orchestrator:
 
     # -- planning --------------------------------------------------------
 
-    def plan_round(self, rnd: int):
-        """The slot's resource plan (see module docstring)."""
+    def _arrival(self, gid: int) -> int:
+        return int((self.cfg.arrivals or {}).get(gid, 0))
+
+    def plan_round(self, rnd: int, roster: Optional[List[int]] = None):
+        """The slot's resource plan over ``roster`` (default: everyone).
+        Returns ``(plan, net)`` where ``net`` is the network snapshot
+        sliced to the roster — ``plan.clusters`` index into it, which is
+        the layout the trace records and ``recompute_trace_latencies``
+        reprices."""
+        from repro.core.channel import NetworkState
         from repro.sim.controller import Plan
         cfg = self.cfg
-        ids = np.arange(cfg.n_devices)
+        if roster is None:
+            roster = list(range(cfg.n_devices))
+        ids = np.asarray(sorted(int(g) for g in roster))
+        net = self.net if len(ids) == cfg.n_devices else NetworkState(
+            f=self.net.f[ids], rate=self.net.rate[ids])
         if self.ctrl is not None:
-            return self.ctrl.plan_slot(self.net, ids, rnd)
+            return self.ctrl.plan_slot(net, ids, rnd), net
         K = cfg.cluster_size
-        clusters = [list(range(m * K, min((m + 1) * K, cfg.n_devices)))
-                    for m in range(cfg.n_clusters)]
+        n = len(ids)
+        clusters = [list(range(m * K, min((m + 1) * K, n)))
+                    for m in range(-(-n // K))]
         xs = [self._equal_split_x(len(c), self.C) for c in clusters]
-        lat = self._round_latency(cfg.cut, clusters, xs, self.net,
+        lat = self._round_latency(cfg.cut, clusters, xs, net,
                                   self.ncfg, self.prof, cfg.batch,
                                   cfg.local_epochs)
         return Plan(v=cfg.cut, clusters=clusters, ids=ids, xs=xs,
-                    latency=float(lat))
+                    latency=float(lat)), net
 
     def _worker_faults(self) -> Dict[int, List[dict]]:
         cfg = self.cfg
@@ -172,85 +276,206 @@ class Orchestrator:
                      for r in rules]
             for g, rules in (cfg.faults or {}).items()}
         if cfg.delay_scale > 0:
+            plan0, net0 = self.plan_round(0)
             wireless = wireless_delay_rules(
-                self.plan_round(0), self.net, self.ncfg, self.prof,
+                plan0, net0, self.ncfg, self.prof,
                 cfg.batch, scale=cfg.delay_scale)
             for g, rules in wireless.items():
                 out.setdefault(g, []).extend(r.to_dict() for r in rules)
         return out
 
+    # -- membership ------------------------------------------------------
+
+    def _spawn_worker(self, gid: int):
+        cfg = self.cfg
+        inc = max(self._incarnations.get(gid, -1) + 1, self._inc_base)
+        wcfg = {"host": cfg.host, "port": self.port, "device": gid,
+                "incarnation": inc,
+                "faults": self._faults.get(gid, []),
+                "rpc_timeout_s": cfg.rpc_timeout_s,
+                "retries": cfg.retries, "backoff_s": cfg.backoff_s,
+                "backoff_max_s": cfg.backoff_max_s,
+                "heartbeat_s": cfg.heartbeat_s,
+                "connect_timeout_s": cfg.connect_timeout_s,
+                "plan_timeout_s": cfg.ready_timeout_s,
+                "reconnect": cfg.reconnect,
+                "reconnect_timeout_s": cfg.reconnect_timeout_s}
+        p = self._ctx.Process(target=device_main, args=(wcfg,), daemon=True)
+        p.start()
+        self._spawned[gid] = p
+        self._incarnations[gid] = inc
+        self.procs.append(p)
+
+    def _handshake(self, sock: socket.socket):
+        """One incoming connection: REGISTER (fresh worker — needs the
+        PLAN) or REJOIN (already-built worker reconnecting — gets the
+        committed round/step and re-READYs immediately)."""
+        try:
+            ch = Channel(sock)
+            mtype, msg = ch.recv(timeout=10.0)
+            gid = int(msg["device"])
+            if mtype == MsgType.REGISTER:
+                self.server.attach(gid, ch)
+                ch.send(MsgType.PLAN, self._plan_msg)
+            elif mtype == MsgType.REJOIN:
+                self.server.attach(gid, ch)
+                ch.send(MsgType.REJOIN_ACK,
+                        {"round": self._next_round,
+                         "step": self.server._step})
+            else:
+                ch.close()
+        except Exception:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _membership_tick(self):
+        """Spawn due arrivals; with ``respawn``, replace dead workers
+        (capped backoff, bumped incarnation). An orphan worker that
+        REJOINed on its own is left alone."""
+        cfg = self.cfg
+        now = time.monotonic()
+        for gid in range(cfg.n_devices):
+            a = self._arrival(gid)
+            if a > self.start_round and self._next_round < a - 1:
+                continue                      # arrival not due yet
+            p = self._spawned.get(gid)
+            if p is not None and p.is_alive():
+                continue
+            if p is None:
+                if gid in self.server.channels \
+                        and gid not in self.server.dead:
+                    continue                  # orphan rejoined: alive
+                if a > self.start_round:
+                    self._spawn_worker(gid)   # late arrival, first spawn
+                    continue
+            if not cfg.respawn or now < self._respawn_at.get(gid, 0.0):
+                continue
+            self._spawn_worker(gid)
+            self._respawn_at[gid] = time.monotonic() + \
+                self._backoffs.setdefault(
+                    gid, Backoff(cfg.respawn_backoff_s,
+                                 cfg.backoff_max_s)).next()
+
+    def _membership(self):
+        self.listener.settimeout(0.2)
+        while not self._mem_stop.is_set():
+            try:
+                sock, _ = self.listener.accept()
+            except socket.timeout:
+                sock = None
+            except OSError:
+                return          # listener closed: shutting down
+            if sock is not None:
+                self._handshake(sock)
+            self._membership_tick()
+
     # -- lifecycle -------------------------------------------------------
 
     def start(self):
-        """Bind, spawn workers, handshake, warm up both sides."""
+        """Bind, restore (resume), spawn workers, handshake, warm up."""
         cfg = self.cfg
         from repro.core.cpsl import CPSL
         from repro.core.splitting import make_split_model
 
         _, labels, shards = build_shards(cfg.data_spec())
         cpsl = CPSL(make_split_model("lenet", cfg.cut), cfg.ccfg())
-        self.server = RTServer(cfg, cpsl, shards, labels, self.writer)
+
+        wal = None
+        wal_dir = self._resume_from or cfg.wal_dir
+        if wal_dir is not None:
+            from repro.checkpoint.checkpointer import Checkpointer
+            wal = Checkpointer(wal_dir, keep=cfg.wal_keep)
+        self.server = RTServer(cfg, cpsl, shards, labels, self.writer,
+                               wal=wal)
+
+        if self._resume_from is not None and wal is not None \
+                and wal.steps():
+            restored = wal.restore(self.server.wal_template())
+            self.start_round = int(restored["round"])
+            self.server.adopt_state(restored["state"])
+            if cfg.trace_path and os.path.exists(cfg.trace_path):
+                # drop records of the crashed (uncommitted) round: they
+                # will be re-emitted when the round re-runs
+                kept = [r for r in load_trace(cfg.trace_path)
+                        if int(r.get("round", -1)) < self.start_round]
+                self.writer.rewrite(kept)
+        self._next_round = self.start_round
+        self._rostered = {g for g in range(cfg.n_devices)
+                          if self._arrival(g) <= self.start_round}
+        self._faults = self._worker_faults()
 
         self.listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self.listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self.listener.bind((cfg.host, cfg.port))
-        self.listener.listen(cfg.n_devices)
-        port = self.listener.getsockname()[1]
+        self.listener.listen(cfg.n_devices + 4)
+        self.port = self.listener.getsockname()[1]
 
-        faults = self._worker_faults()
-        ctx = mp.get_context("spawn")   # workers must re-init jax cleanly
-        for gid in range(cfg.n_devices):
-            wcfg = {"host": cfg.host, "port": port, "device": gid,
-                    "faults": faults.get(gid, []),
-                    "rpc_timeout_s": cfg.rpc_timeout_s,
-                    "retries": cfg.retries, "backoff_s": cfg.backoff_s,
-                    "heartbeat_s": cfg.heartbeat_s,
-                    "connect_timeout_s": cfg.connect_timeout_s,
-                    "plan_timeout_s": cfg.ready_timeout_s}
-            p = ctx.Process(target=device_main, args=(wcfg,), daemon=True)
-            p.start()
-            self.procs.append(p)
+        self._plan_msg = {"model": "lenet", "v": cfg.cut,
+                          "local_epochs": cfg.local_epochs,
+                          "batch": cfg.batch,
+                          "seed": cfg.seed, "optimizer": cfg.optimizer,
+                          "lr_device": cfg.lr_device,
+                          "momentum": cfg.momentum,
+                          "weight_decay": cfg.weight_decay,
+                          "warmup": cfg.warmup, "data": cfg.data_spec()}
 
-        plan_msg = {"model": "lenet", "v": cfg.cut,
-                    "local_epochs": cfg.local_epochs, "batch": cfg.batch,
-                    "seed": cfg.seed, "optimizer": cfg.optimizer,
-                    "lr_device": cfg.lr_device, "momentum": cfg.momentum,
-                    "weight_decay": cfg.weight_decay,
-                    "warmup": cfg.warmup, "data": cfg.data_spec()}
-        deadline = time.monotonic() + cfg.ready_timeout_s
-        registered = 0
-        while registered < cfg.n_devices:
-            self.listener.settimeout(max(0.1, deadline - time.monotonic()))
-            try:
-                sock, _ = self.listener.accept()
-            except socket.timeout:
-                raise TimeoutError(
-                    f"only {registered}/{cfg.n_devices} devices registered")
-            ch = Channel(sock)
-            mtype, msg = ch.recv(timeout=10.0)
-            assert mtype == MsgType.REGISTER, mtype
-            gid = int(msg["device"])
-            self.server.attach(gid, ch)
-            ch.send(MsgType.PLAN, plan_msg)
-            registered += 1
+        resume = self._resume_from is not None
+        now = time.monotonic()
+        grace = cfg.rejoin_grace_s if resume else 0.0
+        self._respawn_at = {g: now + grace for g in range(cfg.n_devices)}
+        if not resume:
+            for gid in sorted(self._rostered):
+                self._spawn_worker(gid)
 
-        ready = self.server.wait_ready(
-            set(range(cfg.n_devices)),
-            timeout=max(1.0, deadline - time.monotonic()))
+        self._mem_thread = threading.Thread(target=self._membership,
+                                            daemon=True)
+        self._mem_thread.start()
+
+        ready = self.server.wait_ready(set(self._rostered),
+                                       timeout=cfg.ready_timeout_s)
         if not ready:
             raise TimeoutError("no device ever became READY")
         if cfg.warmup:
             self.server.warmup()
 
+    def _roster(self, rnd: int) -> List[int]:
+        """The devices planned for round ``rnd``: the initial roster
+        plus every arrival that is both due and READY (an arrival joins
+        at a round *boundary*, never mid-round)."""
+        for g in range(self.cfg.n_devices):
+            if g not in self._rostered and self._arrival(g) <= rnd \
+                    and g in self.server.ready:
+                self._rostered.add(g)
+        return sorted(self._rostered)
+
     def run(self):
-        """Drive all rounds; returns (final state, trace records)."""
-        for rnd in range(self.cfg.rounds):
-            plan = self.plan_round(rnd)
-            self.metrics.append(self.server.run_round(rnd, plan,
-                                                      net=self.net))
+        """Drive rounds ``start_round..rounds``; returns (final state,
+        trace records). With a WAL, every round boundary is committed;
+        ``chaos_kill_server`` rounds then SIGKILL this process — the
+        ``run_elastic`` supervisor restarts it with ``resume_from``."""
+        cfg = self.cfg
+        for rnd in range(self.start_round, cfg.rounds):
+            self._next_round = rnd
+            for gid in range(cfg.n_devices):
+                if gid not in self._rostered \
+                        and 0 < self._arrival(gid) <= rnd \
+                        and gid not in self._arrival_waited:
+                    # arrival boundary: bounded wait for the newcomer
+                    self._arrival_waited.add(gid)
+                    self.server._await_rejoin({gid}, cfg.rejoin_timeout_s)
+            plan, net = self.plan_round(rnd, self._roster(rnd))
+            self.metrics.append(self.server.run_round(rnd, plan, net=net))
+            self.server.commit_round(rnd)
+            if rnd in tuple(cfg.chaos_kill_server or ()):
+                os.kill(os.getpid(), signal.SIGKILL)
         return self.server.state, self.writer.records
 
     def stop(self, linger_s: float = 3.0):
+        self._mem_stop.set()
+        if self._mem_thread is not None:
+            self._mem_thread.join(timeout=5.0)
         if self.server is not None:
             try:
                 self.server.shutdown(linger_s)
@@ -266,12 +491,124 @@ class Orchestrator:
             self.listener.close()
 
 
-def run_loopback(cfg: RTConfig):
+def run_loopback(cfg: RTConfig, resume_from: Optional[str] = None):
     """Stand a loopback deployment up, run it, tear it down. Returns
     (final CPSL state dict, list of trace record dicts)."""
-    orch = Orchestrator(cfg)
+    orch = Orchestrator(cfg, resume_from=resume_from)
     try:
         orch.start()
         return orch.run()
     finally:
         orch.stop()
+
+
+# -- crash-resume supervision --------------------------------------------
+
+def _free_port(host: str) -> int:
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind((host, 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _orchestrator_main(cfg_dict: dict, resume: bool,
+                       incarnation_base: int):
+    """Subprocess entrypoint for ``run_elastic`` (top-level so the spawn
+    context can pickle it)."""
+    cfg = RTConfig(**cfg_dict)
+    orch = Orchestrator(cfg,
+                        resume_from=(cfg.wal_dir if resume else None),
+                        incarnation_base=incarnation_base)
+    try:
+        orch.start()
+        orch.run()
+    finally:
+        orch.stop()
+
+
+def run_elastic(cfg: RTConfig, max_restarts: int = 5):
+    """Supervise a crash-resumable deployment: run the orchestrator as a
+    subprocess and, whenever it dies (a chaos SIGKILL, or for real),
+    restart it with ``resume_from=`` so it adopts the WAL's last
+    committed round — surviving workers REJOIN, missing ones are
+    respawned. Returns (final state restored from the WAL, trace
+    records) — the same contract as ``run_loopback``."""
+    if not cfg.wal_dir or not cfg.trace_path:
+        raise ValueError(
+            "run_elastic needs cfg.wal_dir and cfg.trace_path — the WAL "
+            "and the fsync'd trace are what a restart resumes from")
+    cfg.validate()
+    if cfg.port == 0:
+        # workers must re-find a RESTARTED server: pin a concrete port
+        cfg = dataclasses.replace(cfg, port=_free_port(cfg.host))
+    cfg_dict = asdict(cfg)
+    ctx = mp.get_context("spawn")
+    restarts = 0
+    resume = False
+    while True:
+        p = ctx.Process(target=_orchestrator_main,
+                        args=(cfg_dict, resume, restarts))
+        p.start()
+        p.join()
+        if p.exitcode == 0:
+            break
+        restarts += 1
+        resume = True
+        if restarts > max_restarts:
+            raise RuntimeError(
+                f"orchestrator died {restarts} times "
+                f"(last exit code {p.exitcode}); giving up")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.core.cpsl import CPSL
+    from repro.core.splitting import make_split_model
+    cpsl = CPSL(make_split_model("lenet", cfg.cut), cfg.ccfg())
+    st0 = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
+    template = {"state": jax.tree.map(jnp.zeros_like, st0),
+                "round": jnp.zeros((), jnp.int32)}
+    restored = Checkpointer(cfg.wal_dir, keep=cfg.wal_keep).restore(
+        template)
+    if restored is None or int(restored["round"]) < cfg.rounds:
+        raise RuntimeError("run finished but the WAL never committed the "
+                           "final round")
+    return restored["state"], load_trace(cfg.trace_path)
+
+
+# -- the in-process reference --------------------------------------------
+
+def loopback_reference(cfg: RTConfig, zero_weight=None):
+    """The in-process looped reference for cfg's fixed contiguous plan:
+    what a fault-free (or losslessly *recovered*) deployment must
+    reproduce bit for bit. ``zero_weight=(m, k)`` zeroes one device's
+    eq.-8 weight in every round — the simulated-dropout semantics a
+    genuinely-lost upload must match. Returns (state, last-round loss).
+    """
+    import jax
+    from repro.core.cpsl import CPSL
+    from repro.core.splitting import make_split_model
+    from repro.data.pipeline import CPSLDataset, batch_seed
+
+    x, y, shards = build_shards(cfg.data_spec())
+    cpsl = CPSL(make_split_model("lenet", cfg.cut), cfg.ccfg())
+    state = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
+    ds = CPSLDataset(x, y, shards, cfg.batch)
+    K = cfg.cluster_size
+    clusters = [list(range(m * K, min((m + 1) * K, cfg.n_devices)))
+                for m in range(cfg.n_clusters)]
+    sizes = [ds.data_sizes(c) for c in clusters]
+    if zero_weight is not None:
+        m, k = zero_weight
+        sizes[m] = sizes[m].copy()
+        sizes[m][k] = 0.0
+    loss = None
+    for rnd in range(cfg.rounds):
+        def batch_fn(m, l, _rnd=rnd):
+            return ds.cluster_batch(clusters[m],
+                                    seed=batch_seed(cfg.seed, _rnd, m, l))
+        state, metrics = cpsl.run_round(state, batch_fn, data_sizes=sizes)
+        loss = metrics["loss"]
+    return state, loss

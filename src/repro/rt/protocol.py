@@ -26,10 +26,13 @@ Bit-exactness note: arrays cross the wire as raw ``tobytes`` and come
 back via ``frombuffer`` — the identity roundtrip the loopback
 equivalence test relies on (no float re-encoding anywhere).
 
-Errors: ``VersionMismatch`` (bad magic or version byte), ``BadFrame``
-(unknown message type / malformed payload), ``TruncatedFrame`` (EOF or
-stall mid-frame), ``ConnectionClosed`` (clean EOF between frames). All
-derive from ``ProtocolError``.
+Errors: ``BadMagic`` (the peer is not speaking this protocol at all),
+``VersionMismatch`` (right protocol, wrong revision — carries
+``peer_version``/``our_version`` and names both in the message so a
+mixed-version deployment is diagnosable from the exception alone),
+``BadFrame`` (unknown message type / malformed payload),
+``TruncatedFrame`` (EOF or stall mid-frame), ``ConnectionClosed``
+(clean EOF between frames). All derive from ``ProtocolError``.
 """
 from __future__ import annotations
 
@@ -60,6 +63,14 @@ class MsgType(enum.IntEnum):
     BYE = 10           # device -> server: {device}
     ERROR = 11         # server -> device: {reason} (e.g. dropped straggler)
     READY = 12         # device -> server: warmup/jit done, {device}
+    REJOIN = 13        # device -> server: already-built worker reconnecting
+                       #                   after a server restart, {device}
+    REJOIN_ACK = 14    # server -> device: {round, step} — the committed
+                       #                   round/step counters the resumed
+                       #                   run will continue from (device
+                       #                   params ride CLUSTER_START as
+                       #                   always: workers are stateless
+                       #                   between clusters by design)
 
 
 class ProtocolError(RuntimeError):
@@ -67,7 +78,35 @@ class ProtocolError(RuntimeError):
 
 
 class VersionMismatch(ProtocolError):
-    pass
+    """The peer frames this protocol but at a different revision.
+
+    Actionable by construction: ``peer_version`` / ``our_version`` are
+    carried as attributes and both are named in the message, so a
+    mixed-version deployment (e.g. an old worker rejoining an upgraded
+    server) fails with "upgrade X" instead of a generic frame error.
+    """
+
+    def __init__(self, peer_version: int, our_version: int):
+        self.peer_version = int(peer_version)
+        self.our_version = int(our_version)
+        newer = self.peer_version > self.our_version
+        super().__init__(
+            f"protocol version mismatch: peer speaks v{peer_version}, "
+            f"we speak v{our_version} — upgrade "
+            f"{'this side' if newer else 'the peer'} so both ends run "
+            f"the same repro.rt revision")
+
+
+class BadMagic(VersionMismatch):
+    """Wrong magic byte: the peer is not speaking this protocol at all
+    (or the stream desynchronized). Subclasses ``VersionMismatch`` so
+    existing handlers keep catching it."""
+
+    def __init__(self, magic: int):
+        self.magic = int(magic)
+        ProtocolError.__init__(
+            self, f"bad magic 0x{magic:02x} (expected 0x{MAGIC:02x}): "
+                  f"peer is not a repro.rt endpoint")
 
 
 class BadFrame(ProtocolError):
@@ -150,9 +189,9 @@ def parse_header(hdr: bytes) -> Tuple[MsgType, int]:
         raise TruncatedFrame(f"short header: {len(hdr)} bytes")
     magic, version, mtype, length = HEADER.unpack(hdr)
     if magic != MAGIC:
-        raise VersionMismatch(f"bad magic 0x{magic:02x}")
+        raise BadMagic(magic)
     if version != VERSION:
-        raise VersionMismatch(f"peer speaks v{version}, we speak v{VERSION}")
+        raise VersionMismatch(peer_version=version, our_version=VERSION)
     if length > MAX_FRAME:
         raise BadFrame(f"frame of {length} bytes exceeds cap {MAX_FRAME}")
     try:

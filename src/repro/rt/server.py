@@ -31,6 +31,22 @@ Retransmits are idempotent: GRADs and AGG_ACKs are cached per
 (round, cluster, epoch, device) and replayed on duplicate uploads;
 uploads the server no longer wants get an ERROR so the device stops
 retrying.
+
+Elastic recovery (all off by default — legacy semantics unchanged):
+
+  * ``cluster_retries > 0`` turns a member's mid-cluster *death*
+    (connection lost — a SIGKILL'd worker, not a mere straggler) into a
+    lossless retry: the cluster's state is rolled back to its entry
+    snapshot, the server waits up to ``rejoin_timeout_s`` for the dead
+    members to be respawned/REJOINed and READY again, and the whole
+    cluster re-runs from epoch 0 — same (round, cluster, epoch) batch
+    keys, same rolled-back params, so the retried cluster is bit-exact
+    with the fault-free one. If nobody comes back in time it falls
+    back to the legacy masked-drop path (the genuinely-lost case).
+  * ``wal`` (a ``repro.checkpoint.Checkpointer``) makes every round
+    boundary durable: ``commit_round`` writes {state, round} after each
+    round, and ``adopt_state`` rehydrates a restarted server from the
+    last committed record — the orchestrator's ``resume_from`` path.
 """
 from __future__ import annotations
 
@@ -48,12 +64,24 @@ from repro.rt.qos import QoSMonitor
 from repro.telemetry import TraceWriter
 
 
+class _ClusterRetry(Exception):
+    """Raised inside a cluster attempt when its missing members all
+    *died* (connection lost) and a lossless retry is still allowed."""
+
+    def __init__(self, gids):
+        self.gids = set(int(g) for g in gids)
+        super().__init__(f"cluster members died: {sorted(self.gids)}")
+
+
 class RTServer:
-    def __init__(self, cfg, cpsl, shards, labels, writer: TraceWriter):
+    def __init__(self, cfg, cpsl, shards, labels, writer: TraceWriter,
+                 wal=None):
         """``cfg`` is the orchestrator's RTConfig (duck-typed: timeouts,
         straggler policy, seed); ``cpsl`` a CPSL built with
         ``fused_step=False``; ``shards``/``labels`` the server's copy of
-        the per-device index arrays and label array."""
+        the per-device index arrays and label array; ``wal`` an optional
+        ``Checkpointer`` given round-boundary {state, round} records
+        (crash-resume, see module docstring)."""
         import jax
 
         self.cfg, self.cpsl = cfg, cpsl
@@ -78,28 +106,69 @@ class RTServer:
 
         self.state = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
         self._step = int(self.state["step"])
+        self.wal = wal
 
         # connection registry
         self.channels: Dict[int, object] = {}
         self.inbox: "queue.Queue" = queue.Queue()
         self.last_seen: Dict[int, float] = {}
-        self.dead: Set[int] = set()          # connection lost, permanent
+        self.dead: Set[int] = set()          # connection lost (a later
+                                             # re-attach revives the gid)
+        self.ready: Set[int] = set()         # READY seen on the current
+                                             # connection
+        self._round_dropped: Set[int] = set()
+        self._round_recovered: Set[int] = set()
         self._grad_cache: Dict[tuple, dict] = {}
         self._ack_cache: Set[tuple] = set()
+
+    # -- crash-resume ----------------------------------------------------
+
+    def wal_template(self):
+        """The pytree shape of one WAL record (deserialize target)."""
+        import jax.numpy as jnp
+        return {"state": self._jax.tree.map(jnp.zeros_like, self.state),
+                "round": jnp.zeros((), jnp.int32)}
+
+    def commit_round(self, rnd: int):
+        """Durably record the state AFTER round ``rnd`` completed. The
+        trace record for ``rnd`` is already on disk (fsync'd) when this
+        runs, so resume truncation never loses a committed round."""
+        import jax.numpy as jnp
+        if self.wal is not None:
+            self.wal.save({"state": self.state,
+                           "round": jnp.asarray(rnd + 1, jnp.int32)},
+                          step=rnd + 1)
+
+    def adopt_state(self, state):
+        """Rehydrate from a restored WAL record's state dict."""
+        self.state = state
+        self._step = int(state["step"])
 
     # -- connections -----------------------------------------------------
 
     def attach(self, gid: int, channel):
-        """Register a device channel and start its reader thread."""
+        """Register a device channel and start its reader thread. A
+        re-attach (REJOIN after a crash) replaces the old channel and
+        revives the gid."""
+        old = self.channels.get(gid)
+        if old is not None and old is not channel:
+            try:
+                old.close()
+            except Exception:
+                pass
         self.channels[gid] = channel
         self.last_seen[gid] = time.monotonic()
+        self.dead.discard(gid)
 
         def reader():
             while True:
                 try:
                     mtype, payload = channel.recv(timeout=None)
                 except Exception:
-                    self.inbox.put((gid, None, None))
+                    # carry the channel so death is attributed to THIS
+                    # attachment — a replaced channel's dying reader
+                    # must not take down its successor
+                    self.inbox.put((gid, None, channel))
                     return
                 self.inbox.put((gid, mtype, payload))
 
@@ -108,14 +177,19 @@ class RTServer:
     def _send(self, gid: int, mtype: MsgType, payload):
         if gid in self.dead:
             return
+        ch = self.channels.get(gid)
+        if ch is None:          # planned but never connected (arrival)
+            self._mark_dead(gid)
+            return
         try:
-            self.channels[gid].send(mtype, payload)
+            ch.send(mtype, payload)
         except (pr.ProtocolError, OSError):
             self._mark_dead(gid)
 
     def _mark_dead(self, gid: int):
         if gid not in self.dead:
             self.dead.add(gid)
+        self.ready.discard(gid)
 
     # -- warmup ----------------------------------------------------------
 
@@ -146,10 +220,14 @@ class RTServer:
         heartbeats update liveness, cached retransmits are replayed,
         the rest is ERRORed so devices stop retrying."""
         if mtype is None:
-            self._mark_dead(gid)
+            if payload is None or payload is self.channels.get(gid):
+                self._mark_dead(gid)
             return
         self.last_seen[gid] = time.monotonic()
-        if mtype in (MsgType.HEARTBEAT, MsgType.READY, MsgType.BYE):
+        if mtype == MsgType.READY:
+            self.ready.add(gid)
+            return
+        if mtype in (MsgType.HEARTBEAT, MsgType.BYE):
             return
         if mtype == MsgType.SMASHED:
             key = (payload.get("round"), payload.get("m"),
@@ -240,12 +318,43 @@ class RTServer:
                 continue
             if mtype == MsgType.READY:
                 ready.add(gid)
+                self.ready.add(gid)
                 self.last_seen[gid] = time.monotonic()
             else:
                 self._handle_stray(gid, mtype, payload, "warmup")
         for gid in want - ready - self.dead:
             self._mark_dead(gid)
         return ready
+
+    # -- rejoin ----------------------------------------------------------
+
+    def _await_rejoin(self, gids: Set[int], timeout_s: float) -> bool:
+        """Pump the inbox until every gid in ``gids`` is READY again on
+        a fresh connection (the orchestrator's membership thread runs
+        the REJOIN handshake and re-``attach``es), or the deadline
+        passes."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            if all(g in self.ready and g not in self.dead for g in gids):
+                return True
+            left = deadline - time.monotonic()
+            if left <= 0:
+                return False
+            try:
+                gid, mtype, payload = self.inbox.get(
+                    timeout=min(left, 0.25))
+            except queue.Empty:
+                continue
+            self._handle_stray(gid, mtype, payload, "rejoin")
+
+    def _purge_cluster_caches(self, rnd: int, m: int):
+        """Drop the aborted attempt's idempotency caches so the retried
+        cluster's replies are recomputed from the rolled-back state."""
+        for key in [k for k in self._grad_cache
+                    if k[0] == rnd and k[1] == m]:
+            del self._grad_cache[key]
+        self._ack_cache.difference_update(
+            {k for k in self._ack_cache if k[0] == rnd and k[1] == m})
 
     # -- the round -------------------------------------------------------
 
@@ -254,8 +363,39 @@ class RTServer:
 
     def _run_cluster(self, rnd: int, m: int, members: List[int],
                      step0: int) -> List:
+        """One cluster, with up to ``cfg.cluster_retries`` lossless
+        retries when members *die* mid-cluster (see module docstring).
+        With retries at 0 (the default) this is exactly one legacy
+        attempt."""
+        cfg = self.cfg
+        retries = int(getattr(cfg, "cluster_retries", 0) or 0)
+        st0 = self.state            # entry snapshot: rollback target
+        for _ in range(retries):
+            try:
+                return self._run_cluster_once(rnd, m, members, step0,
+                                              allow_retry=True)
+            except _ClusterRetry as e:
+                self.state = st0    # the aborted attempt may have
+                                    # stepped the server params
+                self._purge_cluster_caches(rnd, m)
+                t0 = time.monotonic()
+                ok = self._await_rejoin(
+                    e.gids, float(getattr(cfg, "rejoin_timeout_s", 30.0)))
+                self.qos.emit(rnd, "rejoin_wait",
+                              time.monotonic() - t0, cluster=m, ok=ok)
+                if ok:
+                    self._round_recovered.update(e.gids)
+                else:
+                    break           # nobody came back: genuinely lost
+        return self._run_cluster_once(rnd, m, members, step0,
+                                      allow_retry=False)
+
+    def _run_cluster_once(self, rnd: int, m: int, members: List[int],
+                          step0: int, allow_retry: bool = False) -> List:
         """One cluster's L local epochs + FedAvg. Returns the per-epoch
-        losses (device scalars)."""
+        losses (device scalars). With ``allow_retry``, a collection
+        phase whose missing members all *died* raises ``_ClusterRetry``
+        instead of falling to the masked-drop path."""
         import jax.numpy as jnp
         jax = self._jax
         cfg, cpsl = self.cfg, self.cpsl
@@ -263,6 +403,8 @@ class RTServer:
             cpsl.ccfg.local_epochs
         st = self.state
         cluster_dead = {g for g in members if g in self.dead}
+        if allow_retry and cluster_dead:
+            raise _ClusterRetry(cluster_dead)
 
         live0 = [g for g in members if g not in cluster_dead]
         if not live0:
@@ -287,6 +429,9 @@ class RTServer:
                         and p.get("m") == m and p.get("epoch") == l)
 
             got = self._collect(want, accept, f"r{rnd}m{m}l{l}")
+            missing = want - set(got)
+            if allow_retry and missing and missing <= self.dead:
+                raise _ClusterRetry(missing)
             for gid in want:
                 if gid in got:
                     self.qos.emit(rnd, "upload",
@@ -360,7 +505,10 @@ class RTServer:
                           device=gid, cluster=m, ok=True)
 
         got = self._collect(want, accept_agg, f"r{rnd}m{m}agg", on_agg)
-        for gid in want - set(got):
+        missing = want - set(got)
+        if allow_retry and missing and missing <= self.dead:
+            raise _ClusterRetry(missing)
+        for gid in missing:
             cluster_dead.add(gid)
             self.qos.emit(rnd, "model_up", time.monotonic() - agg_t0,
                           device=gid, cluster=m, ok=False)
@@ -394,7 +542,8 @@ class RTServer:
         eq. 9) and emit the trace record. Returns round metrics."""
         import jax.numpy as jnp
         t0 = time.monotonic()
-        self._round_dropped: Set[int] = set()
+        self._round_dropped = set()
+        self._round_recovered = set()
         self._grad_cache.clear()
         losses = []
         L = self.cpsl.ccfg.local_epochs
@@ -416,7 +565,8 @@ class RTServer:
                "clusters_global": clusters_global,
                "xs": [np.asarray(x) for x in plan.xs],
                "planned_latency_s": plan.latency,
-               "wall_s": wall, "dropped": dropped, "source": "rt"}
+               "wall_s": wall, "dropped": dropped,
+               "recovered": sorted(self._round_recovered), "source": "rt"}
         if net is not None:
             rec["f"], rec["rate"] = net.f, net.rate
             rec["latency_s"] = plan.latency

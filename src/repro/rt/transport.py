@@ -19,6 +19,8 @@ sent, exercising retry), 'disconnect' hard-closes the socket and raises
 """
 from __future__ import annotations
 
+import os
+import signal
 import socket
 import threading
 import time
@@ -90,6 +92,10 @@ class Channel:
                 kind, delay = act
                 if kind == "drop":
                     return False
+                if kind == "kill":
+                    # a real crash, not an exception: no BYE, no socket
+                    # shutdown, no atexit — exactly what SIGKILL does
+                    os.kill(os.getpid(), signal.SIGKILL)
                 if kind == "disconnect":
                     self.close()
                     raise InjectedDisconnect(

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Union
 
@@ -97,6 +99,8 @@ class RoundRecord(_Record):
     loss: Optional[float] = None
     eval: Optional[Any] = None
     dropped: Optional[List[int]] = None
+    recovered: Optional[List[int]] = None  # rt: died mid-cluster, came
+                                           # back via lossless retry
     source: Optional[str] = None          # "sim" | "rt"
     events: Optional[List[dict]] = None
     extras: Dict[str, Any] = field(default_factory=dict)
@@ -131,10 +135,18 @@ def parse_record(d: dict) -> Union[RoundRecord, QoSRecord]:
 class TraceWriter:
     """Append-only JSONL sink + in-memory record list. ``path=None``
     keeps records in memory only; ``fresh=True`` truncates an existing
-    file (stale rounds would interleave into downstream recompute)."""
+    file (stale rounds would interleave into downstream recompute).
 
-    def __init__(self, path: Optional[str] = None, fresh: bool = True):
+    ``fsync=True`` makes every emit durable (flush + ``os.fsync``)
+    before returning — the rt server runs its trace in this mode so a
+    SIGKILL can tear at most the line being written, never lose a
+    committed round. The torn final line is ``load_trace``'s problem.
+    """
+
+    def __init__(self, path: Optional[str] = None, fresh: bool = True,
+                 fsync: bool = False):
         self.path = path
+        self.fsync = fsync
         self.records: List[dict] = []
         if path and fresh:
             open(path, "w").close()
@@ -145,9 +157,46 @@ class TraceWriter:
         if self.path:
             with open(self.path, "a") as f:
                 f.write(json.dumps(d) + "\n")
+                if self.fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
         return d
 
+    def rewrite(self, records: List[dict]):
+        """Atomically replace the file (and in-memory list) with
+        ``records`` — the resume path uses this to truncate a crashed
+        run's trace back to its last committed round."""
+        self.records = list(records)
+        if self.path:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                for d in self.records:
+                    f.write(json.dumps(d) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
 
-def load_trace(path: str) -> List[dict]:
+
+def load_trace(path: str, tolerate_torn_tail: bool = True) -> List[dict]:
+    """Parse a JSONL trace. A process killed mid-write leaves a torn
+    *final* line (no trailing newline / truncated JSON); with
+    ``tolerate_torn_tail`` that line is dropped with a warning instead
+    of raising, because every earlier line was complete when it was
+    appended. A malformed line anywhere *else* is real corruption and
+    still raises."""
     with open(path) as f:
-        return [json.loads(line) for line in f if line.strip()]
+        lines = [ln for ln in f if ln.strip()]
+    out = []
+    for i, line in enumerate(lines):
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            if tolerate_torn_tail and i == len(lines) - 1:
+                warnings.warn(
+                    f"{path}: dropping torn final trace line "
+                    f"({len(line)} bytes): {e}", RuntimeWarning)
+                break
+            raise ValueError(
+                f"{path}: corrupt trace line {i + 1} of {len(lines)}: {e}"
+            ) from e
+    return out

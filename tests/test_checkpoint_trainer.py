@@ -107,3 +107,67 @@ def test_elastic_restore_dtype_and_shape(tmp_path):
     s2 = ck.restore(s2)
     for a, b in zip(jax.tree.leaves(s1["dev"]), jax.tree.leaves(s2["dev"])):
         assert jnp.array_equal(a, b)
+
+
+def _tiny_state():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_corrupt_latest_falls_back_to_previous(tmp_path):
+    """A bit-flipped latest checkpoint fails its crc32 and restore()
+    falls back to the previous keep-k entry with a warning — a damaged
+    last save cannot brick a resume."""
+    import warnings
+    from repro.checkpoint.checkpointer import CheckpointCorrupt
+    ck = Checkpointer(str(tmp_path), keep=3)
+    st = _tiny_state()
+    ck.save(st, step=1)
+    st2 = {"w": st["w"] + 1.0, "step": jnp.asarray(4, jnp.int32)}
+    ck.save(st2, step=2)
+    # flip one payload bit in the newest file
+    latest = os.path.join(str(tmp_path), "ckpt_0000000002")
+    blob = bytearray(open(latest, "rb").read())
+    blob[len(blob) // 2] ^= 0x40
+    open(latest, "wb").write(bytes(blob))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        got = ck.restore(jax.tree.map(jnp.zeros_like, st))
+    assert any("falling back" in str(c.message) for c in caught)
+    assert ck.restored_step == 1
+    assert np.array_equal(np.asarray(got["w"]), np.asarray(st["w"]))
+    # an explicitly requested corrupt step still fails loudly
+    with pytest.raises(CheckpointCorrupt):
+        ck.restore(jax.tree.map(jnp.zeros_like, st), step=2)
+
+
+def test_all_checkpoints_corrupt_raises(tmp_path):
+    """When every entry fails verification the failure is loud, not a
+    silent cold start."""
+    import warnings
+    from repro.checkpoint.checkpointer import CheckpointCorrupt
+    ck = Checkpointer(str(tmp_path), keep=2)
+    st = _tiny_state()
+    ck.save(st, step=1)
+    ck.save(st, step=2)
+    for name in ("ckpt_0000000001", "ckpt_0000000002"):
+        p = os.path.join(str(tmp_path), name)
+        open(p, "wb").write(b"RCK1" + b"\x00" * 16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(CheckpointCorrupt, match="all 2 checkpoints"):
+            ck.restore(jax.tree.map(jnp.zeros_like, st))
+
+
+def test_truncated_checkpoint_is_corrupt(tmp_path):
+    """A file cut short mid-write (crash during save) is detected as
+    corruption, not decoded garbage."""
+    from repro.checkpoint.checkpointer import CheckpointCorrupt
+    ck = Checkpointer(str(tmp_path), keep=2)
+    st = _tiny_state()
+    ck.save(st, step=1)
+    p = os.path.join(str(tmp_path), "ckpt_0000000001")
+    blob = open(p, "rb").read()
+    open(p, "wb").write(blob[: len(blob) // 2])
+    with pytest.raises(CheckpointCorrupt):
+        ck.restore(jax.tree.map(jnp.zeros_like, st), step=1)

@@ -16,41 +16,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.cpsl import CPSL
-from repro.core.splitting import make_split_model
-from repro.data.pipeline import CPSLDataset, batch_seed
-from repro.rt.device import build_shards
 from repro.rt.faults import FaultRule
-from repro.rt.orchestrator import RTConfig, run_loopback
+from repro.rt.orchestrator import (RTConfig, loopback_reference,
+                                   run_loopback)
 from repro.rt.protocol import MsgType
 
 STATE_KEYS = ("dev", "srv", "dev_opt", "srv_opt", "step")
 
-
-def reference_state(cfg: RTConfig, zero_weight=None):
-    """The in-process looped reference for cfg's fixed contiguous plan.
-    ``zero_weight=(m, k)`` zeroes one device's eq.-8 weight — the
-    simulated-dropout semantics a failed upload must reproduce."""
-    x, y, shards = build_shards(cfg.data_spec())
-    cpsl = CPSL(make_split_model("lenet", cfg.cut), cfg.ccfg())
-    state = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
-    ds = CPSLDataset(x, y, shards, cfg.batch)
-    K = cfg.cluster_size
-    clusters = [list(range(m * K, min((m + 1) * K, cfg.n_devices)))
-                for m in range(cfg.n_clusters)]
-    sizes = [ds.data_sizes(c) for c in clusters]
-    if zero_weight is not None:
-        m, k = zero_weight
-        sizes[m] = sizes[m].copy()
-        sizes[m][k] = 0.0
-    loss = None
-    for rnd in range(cfg.rounds):
-        def batch_fn(m, l, _rnd=rnd):
-            return ds.cluster_batch(clusters[m],
-                                    seed=batch_seed(cfg.seed, _rnd, m, l))
-        state, metrics = cpsl.run_round(state, batch_fn, data_sizes=sizes)
-        loss = metrics["loss"]
-    return state, loss
+# the in-process looped reference now lives next to the orchestrator
+# (tests/test_rt_recovery.py and examples/rt_loopback.py share it)
+reference_state = loopback_reference
 
 
 def assert_state_bit_exact(got, ref):

@@ -123,3 +123,44 @@ def test_unknown_msg_type_and_oversize():
 def test_malformed_payload_is_bad_frame():
     with pytest.raises(pr.BadFrame):
         pr.decode_payload(b"\xc1\xc1\xc1")   # invalid msgpack
+
+
+def test_version_mismatch_is_actionable():
+    """The mixed-version handshake failure names BOTH revisions and
+    carries them as attributes — an old worker meeting an upgraded
+    server (or vice versa) fails with "upgrade X", not a frame error."""
+    buf = bytearray(pr.frame(MsgType.REGISTER, {"device": 0}))
+    newer = bytes(buf[:1]) + bytes([pr.VERSION + 1]) + bytes(buf[2:])
+    with pytest.raises(pr.VersionMismatch) as ei:
+        pr.parse_header(newer[: pr.HEADER.size])
+    e = ei.value
+    assert e.peer_version == pr.VERSION + 1 and e.our_version == pr.VERSION
+    assert f"v{pr.VERSION + 1}" in str(e) and f"v{pr.VERSION}" in str(e)
+    assert "upgrade this side" in str(e)
+    older = bytes(buf[:1]) + bytes([pr.VERSION - 1]) + bytes(buf[2:])
+    with pytest.raises(pr.VersionMismatch) as ei:
+        pr.parse_header(older[: pr.HEADER.size])
+    assert "upgrade the peer" in str(ei.value)
+
+
+def test_bad_magic_names_both_and_is_version_mismatch():
+    """A non-rt peer (wrong magic) reports both bytes and still lands in
+    VersionMismatch handlers (it subclasses it)."""
+    buf = bytearray(pr.frame(MsgType.REGISTER, {"device": 0}))
+    bad = bytes([0x7F]) + bytes(buf[1:])
+    with pytest.raises(pr.BadMagic) as ei:
+        pr.parse_header(bad[: pr.HEADER.size])
+    e = ei.value
+    assert isinstance(e, pr.VersionMismatch)
+    assert e.magic == 0x7F
+    assert "0x7f" in str(e) and f"0x{pr.MAGIC:02x}" in str(e)
+
+
+def test_rejoin_msg_types_are_versioned():
+    """The recovery handshake types exist and frame like any other."""
+    mtype, payload = pr.unpack_frame(
+        pr.frame(MsgType.REJOIN, {"device": 2, "incarnation": 1}))
+    assert mtype == MsgType.REJOIN and payload["incarnation"] == 1
+    mtype, _ = pr.unpack_frame(
+        pr.frame(MsgType.REJOIN_ACK, {"round": 4, "step": 8}))
+    assert mtype == MsgType.REJOIN_ACK

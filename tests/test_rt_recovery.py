@@ -1,0 +1,208 @@
+"""Elastic-recovery contract tests for the CPSL deployment runtime.
+
+The recovery contract has two halves:
+
+  * LOSSLESS recovery is invisible to the numerics: a worker SIGKILL'd
+    mid-cluster and respawned (cluster rolled back + retried), or a
+    server SIGKILL'd at a round boundary and resumed from its WAL,
+    yields final params BIT-EXACT with the fault-free run on the same
+    seeds — because worker state between clusters is entirely derived
+    from what the server ships (CLUSTER_START params + deterministic
+    batch keys) and the WAL commits whole rounds atomically;
+  * a GENUINELY lost round member (nobody comes back) degrades to
+    exactly the simulated-dropout semantics (eq.-8 weight zero), same
+    as the legacy straggler path.
+
+Plus: a newly *arrived* device enters at a round boundary and the
+controller re-plans the layout over the grown roster; and the
+timeout/backoff arithmetic that recovery leans on is property-tested
+(capped, monotone, total retry budget under the straggler deadline).
+
+These tests spawn real worker processes and (for resume) real
+orchestrator subprocesses, so each scenario uses the smallest
+deployment that exercises it.
+"""
+import numpy as np
+import pytest
+
+from repro.lifecycle import Backoff, retry_budget_s, retry_sleeps
+from repro.rt.faults import FaultRule, chaos_schedule
+from repro.rt.orchestrator import (RTConfig, loopback_reference,
+                                   run_elastic, run_loopback)
+from repro.rt.protocol import MsgType
+from _hyp import given, settings, st
+from test_rt_loopback import assert_state_bit_exact, round_records
+
+
+def _cfg(**kw):
+    base = dict(n_devices=2, cluster_size=2, rounds=2, local_epochs=1,
+                batch=4, n_train=400, n_test=64, samples_per_device=60,
+                phase_timeout_s=60.0, rejoin_timeout_s=180.0,
+                reconnect_timeout_s=180.0)
+    base.update(kw)
+    return RTConfig(**base)
+
+
+def _kill_rule(rnd: int, mtype=MsgType.SMASHED) -> FaultRule:
+    """SIGKILL the worker's own process on its first `mtype` send of
+    round `rnd` — scoped to incarnation 0 so the respawn doesn't
+    re-fire while the cluster is retried."""
+    return FaultRule("kill", msg_types=(int(mtype),), rounds=(rnd,),
+                     times=1, incarnations=(0,))
+
+
+def test_worker_kill_respawn_retry_bit_exact():
+    """A worker SIGKILL'd mid-round (first SMASHED of round 0) is
+    respawned by the membership thread; the server rolls the cluster
+    back and re-runs it with the rejoined member — final params
+    bit-exact with the fault-free reference, the round records the
+    recovery, and nothing is dropped."""
+    cfg = _cfg(respawn=True, cluster_retries=2,
+               faults={1: [_kill_rule(0)]})
+    state, records = run_loopback(cfg)
+    ref, _ = loopback_reference(cfg)
+    assert_state_bit_exact(state, ref)
+    rounds = round_records(records)
+    assert [r["round"] for r in rounds] == [0, 1]
+    assert rounds[0]["dropped"] == []
+    assert rounds[0]["recovered"] == [1]
+    assert rounds[1]["dropped"] == [] and rounds[1]["recovered"] == []
+    # the rollback/retry is visible in QoS
+    waits = [q for q in records if q.get("kind") == "qos"
+             and q["phase"] == "rejoin_wait"]
+    assert waits and all(q["ok"] for q in waits)
+
+
+def test_server_kill_resume_bit_exact(tmp_path):
+    """The server is SIGKILL'd at the round-0 boundary (after the WAL
+    commit); the supervisor restarts it with resume_from, the surviving
+    workers REJOIN, and the finished run is bit-exact with the
+    fault-free reference — the crash never happened, numerically."""
+    cfg = _cfg(reconnect=True, wal_dir=str(tmp_path / "wal"),
+               trace_path=str(tmp_path / "trace.jsonl"),
+               chaos_kill_server=(0,))
+    state, records = run_elastic(cfg)
+    ref, ref_loss = loopback_reference(cfg)
+    assert_state_bit_exact(state, ref)
+    rounds = round_records(records)
+    assert [r["round"] for r in rounds] == [0, 1]
+    assert all(r["dropped"] == [] for r in rounds)
+    assert float(rounds[-1]["loss"]) == float(ref_loss)
+
+
+def test_combined_chaos_bit_exact(tmp_path):
+    """THE acceptance scenario: a seeded chaos schedule SIGKILLs one
+    worker mid-round AND the server between rounds; with respawn +
+    reconnect + cluster retries + WAL resume the run still finishes all
+    R rounds with final params bit-exact to the fault-free reference on
+    the same seeds."""
+    rounds = 3
+    plan = chaos_schedule(seed=7, rounds=rounds, n_devices=2,
+                          kill_workers=1, kill_server=1)
+    kinds = {e["kind"] for e in plan.events}
+    assert kinds == {"kill_worker", "kill_server"}
+    cfg = _cfg(rounds=rounds, respawn=True, reconnect=True,
+               cluster_retries=2,
+               faults=plan.worker_faults,
+               chaos_kill_server=plan.server_kill_rounds,
+               wal_dir=str(tmp_path / "wal"),
+               trace_path=str(tmp_path / "trace.jsonl"))
+    state, records = run_elastic(cfg)
+    ref, _ = loopback_reference(cfg)
+    assert_state_bit_exact(state, ref)
+    rnds = round_records(records)
+    assert [r["round"] for r in rnds] == list(range(rounds))
+    assert all(r["dropped"] == [] for r in rnds)
+
+
+def test_genuinely_lost_matches_simulated_dropout():
+    """A worker SIGKILL'd on its AGG send with recovery OFF (no respawn,
+    no retries) is genuinely lost for the round: excluded from FedAvg
+    with exactly the simulated-dropout semantics — bit-exact vs the
+    reference with that device's eq.-8 weight zeroed."""
+    cfg = _cfg(rounds=1, faults={1: [_kill_rule(0, MsgType.AGG)]})
+    state, records = run_loopback(cfg)
+    ref, _ = loopback_reference(cfg, zero_weight=(0, 1))
+    assert_state_bit_exact(state, ref)
+    assert round_records(records)[0]["dropped"] == [1]
+
+
+def test_arrival_joins_replanned_layout():
+    """A device that ARRIVES at the round-1 boundary is spawned by the
+    membership thread, enters the roster once READY, and the
+    controller's re-plan over the grown roster places it in a cluster
+    — the paper's resource management tracking a live population."""
+    cfg = _cfg(n_devices=4, plan="controller", arrivals={3: 1},
+               phase_timeout_s=90.0)
+    state, records = run_loopback(cfg)
+    rounds = round_records(records)
+    assert [r["round"] for r in rounds] == [0, 1]
+    assert sorted(rounds[0]["ids"]) == [0, 1, 2]
+    assert sorted(rounds[1]["ids"]) == [0, 1, 2, 3]
+    flat0 = [g for c in rounds[0]["clusters_global"] for g in c]
+    flat1 = [g for c in rounds[1]["clusters_global"] for g in c]
+    assert 3 not in flat0 and 3 in flat1
+    assert rounds[1]["dropped"] == []
+    # the snapshot recorded with the plan matches the roster slicing
+    assert len(rounds[0]["f"]) == 3 and len(rounds[1]["f"]) == 4
+
+
+# -- timeout/backoff arithmetic (satellite: property tests) ---------------
+
+@settings(max_examples=200, deadline=None)
+@given(retries=st.integers(0, 8),
+       backoff0=st.floats(1e-3, 10.0),
+       cap=st.floats(1e-3, 20.0))
+def test_retry_sleeps_capped_and_monotone(retries, backoff0, cap):
+    sleeps = retry_sleeps(retries, backoff0, cap)
+    assert len(sleeps) == retries
+    assert all(s <= cap + 1e-12 for s in sleeps)
+    assert all(b >= a for a, b in zip(sleeps, sleeps[1:]))
+    # budget identity: (retries+1) waits + the sleeps
+    t = 3.0
+    assert retry_budget_s(t, retries, backoff0, cap) == pytest.approx(
+        (retries + 1) * t + sum(sleeps))
+
+
+@settings(max_examples=200, deadline=None)
+@given(timeout=st.floats(0.1, 30.0), retries=st.integers(0, 6),
+       backoff0=st.floats(1e-3, 2.0), cap=st.floats(0.1, 5.0),
+       slack=st.floats(0.01, 100.0))
+def test_validate_tracks_retry_budget(timeout, retries, backoff0, cap,
+                                      slack):
+    """RTConfig.validate() accepts a config iff the device retry budget
+    is under the phase deadline — the constants can never silently
+    cross again."""
+    budget = retry_budget_s(timeout, retries, backoff0, cap)
+    ok = RTConfig(rpc_timeout_s=timeout, retries=retries,
+                  backoff_s=backoff0, backoff_max_s=cap,
+                  phase_timeout_s=budget + slack)
+    assert ok.validate() is ok
+    bad = RTConfig(rpc_timeout_s=timeout, retries=retries,
+                   backoff_s=backoff0, backoff_max_s=cap,
+                   phase_timeout_s=budget)
+    with pytest.raises(ValueError, match="retry budget"):
+        bad.validate()
+
+
+def test_retry_sleeps_known_values():
+    """Deterministic pin (the property tests above need hypothesis):
+    doubling from backoff0, clipped at cap, budget = waits + sleeps."""
+    assert retry_sleeps(4, 0.25, cap=1.0) == [0.25, 0.5, 1.0, 1.0]
+    assert retry_sleeps(0, 0.25, cap=1.0) == []
+    assert retry_budget_s(2.0, 4, 0.25, 1.0) == pytest.approx(
+        5 * 2.0 + 2.75)
+
+
+def test_backoff_caps_and_resets():
+    b = Backoff(0.25, cap=1.0)
+    assert [b.next() for _ in range(4)] == [0.25, 0.5, 1.0, 1.0]
+    b.reset()
+    assert b.next() == 0.25
+
+
+def test_default_config_validates():
+    """The shipped defaults (and the loopback test config) must satisfy
+    the budget-vs-deadline invariant themselves."""
+    RTConfig().validate()
+    _cfg().validate()
