@@ -1,0 +1,35 @@
+"""repro.analysis — contract linters + jaxpr audits gating the repo's
+bit-exactness invariants (see INVARIANTS.md).
+
+Three passes, one CI entrypoint (``python -m repro.analysis --check``):
+
+  * :mod:`repro.analysis.rng_lint`    — every RNG construction in
+    ``src/`` goes through the :mod:`repro.streams` registry (RNG00x);
+  * :mod:`repro.analysis.jit_audit`   — donation, callback-freedom,
+    dtype discipline, and strong-typed carries on the flagship compiled
+    programs (JIT00x);
+  * :mod:`repro.analysis.thread_lint` — the ``rt/`` runtime's
+    ``# guarded-by`` lock-annotation discipline (THR00x).
+
+Findings diff against the committed ``analysis/baseline.json``; the
+check fails on any finding not baselined with a justification.
+"""
+
+from repro.analysis.report import (Finding, diff_findings, load_baseline,
+                                   write_report)
+
+__all__ = ["Finding", "diff_findings", "load_baseline", "write_report",
+           "run_all"]
+
+
+def run_all(root, jit: bool = True, jit_targets=None):
+    """Run every pass over ``root`` (the ``src/repro`` directory).
+    Returns the combined finding list."""
+    from repro.analysis import jit_audit, rng_lint, thread_lint
+    findings = []
+    findings += rng_lint.run(root)
+    findings += thread_lint.run(root)
+    if jit:
+        findings += jit_audit.run(
+            root, targets=jit_targets or jit_audit.TARGET_NAMES)
+    return findings

@@ -1,0 +1,62 @@
+"""CLI: ``python -m repro.analysis --check [--root src/repro]
+[--baseline .../baseline.json] [--out ANALYSIS.json] [--no-jit]``.
+
+Exit 0 when every finding is baselined (with a justification) and no
+baseline entry is stale-and-load-bearing; exit 1 on any new finding.
+Always writes the full report to ``--out`` when given (CI uploads it as
+an artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import load_baseline, diff_findings, run_all, \
+    write_report
+
+_HERE = Path(__file__).resolve().parent
+_DEFAULT_ROOT = _HERE.parent                   # src/repro
+_DEFAULT_BASELINE = _HERE / "baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--check", action="store_true",
+                    help="run all passes and fail on non-baselined "
+                         "findings")
+    ap.add_argument("--root", default=str(_DEFAULT_ROOT),
+                    help="source root to lint (default: src/repro)")
+    ap.add_argument("--baseline", default=str(_DEFAULT_BASELINE),
+                    help="baseline.json of justified findings")
+    ap.add_argument("--out", default=None,
+                    help="write the full JSON report here (CI artifact)")
+    ap.add_argument("--no-jit", action="store_true",
+                    help="skip the jit-contract audit (AST passes only)")
+    args = ap.parse_args(argv)
+    if not args.check:
+        ap.error("nothing to do: pass --check")
+
+    findings = run_all(args.root, jit=not args.no_jit)
+    baseline = load_baseline(args.baseline)
+    new, stale = diff_findings(findings, baseline)
+    write_report(findings, new, stale, args.out)
+
+    for f in findings:
+        mark = "NEW " if f in new else "base"
+        print(f"[{mark}] {f}")
+    for e in stale:
+        print(f"[stale baseline] {e['key']} — {e['why']}")
+    print(f"{len(findings)} finding(s), {len(new)} new, "
+          f"{len(stale)} stale baseline entr(ies)")
+    if new:
+        print("FAIL: non-baselined findings — fix them or baseline each "
+              "key with a 'why' in", args.baseline, file=sys.stderr)
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,198 @@
+"""RNG-stream lint: every RNG construction in ``src/`` must go through
+``repro.streams`` (or use a literal key provably inside a registered
+tuple namespace).
+
+The pass catalogues every ``np.random.default_rng(...)`` and
+``jax.random.PRNGKey(...)`` / ``jax.random.key(...)`` call by AST,
+resolves literal keys, and checks them against the registry:
+
+  RNG001  ``default_rng`` with a non-literal (or unattributable scalar)
+          key outside ``repro/streams.py`` — the namespace cannot be
+          proven; construct via a registered streams constructor.
+  RNG002  literal tuple key matching no registered tuple pattern.
+  RNG003  the registry itself is inconsistent: two tuple namespaces can
+          collide, or a banned length-1 tuple pattern is declared
+          (``registry_overlaps``).
+  RNG004  raw jax key construction outside ``repro/streams.py`` — use
+          ``streams.model_key`` / ``fleet_master_key`` / etc. so key
+          roots stay catalogued.
+
+``repro/streams.py`` itself is exempt: it is where constructions are
+*supposed* to live.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Sequence, Union
+
+from repro import streams
+from repro.analysis.report import Finding
+
+__all__ = ["run", "lint_file", "lint_source"]
+
+EXEMPT_FILES = ("streams.py",)
+
+# attribute chains that construct a numpy Generator
+_NP_CTORS = {
+    ("np", "random", "default_rng"),
+    ("numpy", "random", "default_rng"),
+    ("random", "default_rng"),          # from numpy import random
+    ("default_rng",),                   # from numpy.random import default_rng
+}
+# attribute chains that construct a jax PRNG key
+_JAX_CTORS = {
+    ("jax", "random", "PRNGKey"), ("jax", "random", "key"),
+    ("jrandom", "PRNGKey"), ("jrandom", "key"),
+    ("random", "PRNGKey"), ("random", "key"),
+    ("PRNGKey",), ("key",),
+}
+
+
+def _dotted(node: ast.expr) -> Optional[tuple]:
+    """('np', 'random', 'default_rng') for np.random.default_rng, etc."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _literal_int(node: ast.expr) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = _literal_int(node.operand)
+        return None if inner is None else -inner
+    return None
+
+
+def _literal_key(node: ast.expr) -> Union[int, tuple, None]:
+    """Resolve an int literal or an all-int-literal tuple; None if the
+    key is not statically resolvable."""
+    v = _literal_int(node)
+    if v is not None:
+        return v
+    if isinstance(node, ast.Tuple):
+        elems = [_literal_int(e) for e in node.elts]
+        if all(e is not None for e in elems):
+            return tuple(elems)
+    return None
+
+
+def _matches_pattern(key: tuple, pattern: Sequence) -> bool:
+    if len(key) != len(pattern):
+        return False
+    for v, p in zip(key, pattern):
+        if isinstance(p, streams.Sym):
+            if not (p.lo <= v and (p.hi is None or v < p.hi)):
+                return False
+        elif v != p:
+            return False
+    return True
+
+
+def _registered_tuple(key: tuple) -> Optional[str]:
+    for spec in streams.REGISTRY.values():
+        if spec.pool == "tuple" and _matches_pattern(key, spec.key):
+            return spec.name
+    return None
+
+
+def lint_source(source: str, relpath: str) -> List[Finding]:
+    """Lint one file's source.  ``relpath`` is used in findings and to
+    apply the streams.py exemption."""
+    if Path(relpath).name in EXEMPT_FILES:
+        return []
+    tree = ast.parse(source, filename=relpath)
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _dotted(node.func)
+        if chain is None:
+            continue
+        if chain in _JAX_CTORS:
+            # ('random', 'key') could be np.random-adjacent only via an
+            # alias we never use; every real match is a jax key root
+            if chain == ("key",) and not _looks_like_jax_key(node):
+                continue
+            findings.append(Finding(
+                "RNG004", relpath, node.lineno,
+                "raw jax key construction outside repro.streams — use a "
+                "registered key-root constructor (streams.model_key, "
+                "fleet_master_key, sampler_key, warmup_key)",
+                detail=f"L{_stable_ord(tree, node)}"))
+            continue
+        if chain not in _NP_CTORS:
+            continue
+        if not node.args:
+            # unseeded OS-entropy generator: no namespace to police
+            continue
+        key = _literal_key(node.args[0])
+        if key is None:
+            findings.append(Finding(
+                "RNG001", relpath, node.lineno,
+                "non-literal RNG key outside repro.streams — the stream "
+                "namespace cannot be proven; use a registered streams "
+                "constructor",
+                detail=f"L{_stable_ord(tree, node)}"))
+        elif isinstance(key, tuple):
+            name = _registered_tuple(key)
+            if name is None:
+                findings.append(Finding(
+                    "RNG002", relpath, node.lineno,
+                    f"literal tuple key {key} matches no registered "
+                    "stream namespace (see repro.streams.REGISTRY)",
+                    detail=f"key{key}"))
+        else:
+            findings.append(Finding(
+                "RNG001", relpath, node.lineno,
+                f"literal scalar key {key} outside repro.streams — "
+                "scalar-pool streams are only attributable through "
+                "their registered constructors",
+                detail=f"key({key})"))
+    return findings
+
+
+def _looks_like_jax_key(node: ast.Call) -> bool:
+    """Bare ``key(...)`` calls are ambiguous; only treat them as jax key
+    constructions when called with a single int-ish positional arg (the
+    jax.random.key signature)."""
+    return len(node.args) == 1 and not node.keywords
+
+
+def _stable_ord(tree: ast.AST, target: ast.Call) -> int:
+    """Ordinal of ``target`` among all Call nodes in the file — a
+    line-number-free discriminator for finding keys."""
+    n = 0
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            n += 1
+            if node is target:
+                return n
+    return 0
+
+
+def lint_file(path: Path, root: Path) -> List[Finding]:
+    rel = str(path.relative_to(root.parent)) if root in path.parents \
+        or path == root else str(path)
+    return lint_source(path.read_text(), rel)
+
+
+def run(root) -> List[Finding]:
+    """Lint every ``.py`` under ``root`` + validate the registry."""
+    root = Path(root)
+    findings: List[Finding] = []
+    for problem in streams.registry_overlaps():
+        findings.append(Finding("RNG003", "repro/streams.py", 0,
+                                f"registry inconsistency: {problem}",
+                                detail=problem))
+    for path in sorted(root.rglob("*.py")):
+        findings.extend(lint_file(path, root))
+    return findings

@@ -12,6 +12,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import streams
+
 
 @dataclass
 class NetworkCfg:
@@ -41,7 +43,7 @@ class NetworkState:
 
 
 def device_means(cfg: NetworkCfg, seed: int = 0):
-    rng = np.random.default_rng(seed)
+    rng = streams.network_means_rng(seed)
     if cfg.homogeneous:
         mu_f = np.full(cfg.n_devices, cfg.f_homog)
         mu_snr = np.full(cfg.n_devices, cfg.snr_homog_db)

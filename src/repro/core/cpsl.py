@@ -49,6 +49,7 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import streams
 from repro import optim
 from repro.configs.base import CPSLConfig
 from repro.core import compression as cmp
@@ -623,7 +624,7 @@ class CPSL:
         """Stacked per-replica states; replica r == ``init_state(
         PRNGKey(seeds[r]))`` bit-for-bit (the fleet contract's solo
         reference)."""
-        states = [self.init_state(jax.random.PRNGKey(int(s)))
+        states = [self.init_state(streams.model_key(int(s)))
                   for s in seeds]
         return jax.tree.map(lambda *ts: jnp.stack(ts), *states)
 

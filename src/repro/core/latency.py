@@ -19,6 +19,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro import streams
 from repro.core.channel import NetworkCfg, NetworkState
 
 
@@ -260,7 +261,7 @@ def equal_split_curve(v: int, clusters: Sequence[Sequence[int]],
     from repro.core.channel import device_means, sample_network
 
     mu_f, mu_snr = device_means(ncfg, seed)
-    rng = np.random.default_rng(seed)
+    rng = streams.curve_rng(seed)
     # each cluster is priced at its OWN size: churn-balanced layouts are
     # routinely unequal (balanced_sizes emits e.g. [4, 3, 3]), and sizing
     # every cluster like the first one mis-prices (or crashes) them

@@ -11,6 +11,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import streams
 from repro.core.channel import NetworkCfg, NetworkState, device_means, sample_network
 from repro.core.latency import CutProfile, PartitionBatch, cluster_latency
 
@@ -168,7 +169,7 @@ def gibbs_clustering(v: int, net: NetworkState, ncfg: NetworkCfg,
 
     Returns (clusters, xs, latency[, history])."""
     N = len(net.f)
-    rng = np.random.default_rng(seed)
+    rng = streams.gibbs_rng(seed)
     if draws is not None:
         init_key, prop_u = draws
         prop_u = np.asarray(prop_u, dtype=np.float64)
@@ -257,7 +258,7 @@ def heuristic_clustering(v, net, ncfg, prof, B, L, n_clusters, cluster_size,
 def random_clustering(v, net, ncfg, prof, B, L, n_clusters, cluster_size,
                       seed=0, optimize_spectrum: bool = False):
     from repro.core.latency import round_latency
-    rng = np.random.default_rng(seed)
+    rng = streams.layout_rng(seed)
     order = rng.permutation(len(net.f))
     clusters = [list(order[m * cluster_size:(m + 1) * cluster_size])
                 for m in range(n_clusters)]
@@ -334,7 +335,7 @@ def saa_cut_selection(prof: CutProfile, ncfg: NetworkCfg, B: int, L: int,
         mu_f, mu_snr = means_override
     else:
         mu_f, mu_snr = device_means(ncfg, seed)
-    rng = np.random.default_rng(seed + 1)
+    rng = streams.saa_network_rng(seed)
     nets = [sample_network(ncfg, mu_f, mu_snr, rng) for _ in range(n_samples)]
     cuts = list(cuts) if cuts is not None else list(range(1, prof.n_cuts + 1))
     means = np.zeros(len(cuts))

@@ -24,6 +24,16 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import streams
+from repro.streams import batch_seed  # re-export: the formula moved to
+                                      # repro.streams (shared registry);
+                                      # importers of pipeline.batch_seed
+                                      # keep working
+
+__all__ = ["shard_sizes", "round_index_table", "batch_seed",
+           "CPSLDataset", "DeviceResidentDataset", "FleetPlan",
+           "fleet_plan", "LMClusterData", "host_slice"]
+
 
 def shard_sizes(device_indices: List[np.ndarray],
                 devices: Sequence[int]) -> np.ndarray:
@@ -47,19 +57,12 @@ def round_index_table(device_indices: List[np.ndarray], batch: int,
         assert len(devices) == K, \
             "fused round needs rectangular (padded) clusters"
         for l in range(local_epochs):
-            rng = np.random.default_rng(batch_seed(seed, rnd, m, l))
+            rng = streams.batch_rng(seed, rnd, m, l)
             for k, d in enumerate(devices):
                 idx = device_indices[d]
                 out[m, l, k] = rng.choice(idx, batch,
                                           replace=len(idx) < batch)
     return out
-
-
-def batch_seed(seed: int, rnd: int, m: int, l: int) -> int:
-    """Deterministic per-(run, round, cluster, epoch) batch seed shared by
-    every trainer that promises bit-exact restart (``train.trainer`` and
-    ``sim.engine`` must draw identical data for identical coordinates)."""
-    return (seed * 1_000_003 + rnd * 971 + m * 31 + l) % (2 ** 31)
 
 
 class CPSLDataset:
@@ -70,7 +73,7 @@ class CPSLDataset:
         self.device_indices = device_indices
         self.B = batch
         self.fields = field_names
-        self.rng = np.random.default_rng(seed)
+        self.rng = streams.data_rng(seed)
 
     def data_sizes(self, devices: Sequence[int]) -> np.ndarray:
         return shard_sizes(self.device_indices, devices)
@@ -81,7 +84,7 @@ class CPSLDataset:
         local dataset (paper: B_{m,k} subset of D_{m,k}). Passing ``seed``
         makes the draw a pure function of (seed, devices) — required for
         bit-exact restart-after-failure."""
-        rng = np.random.default_rng(seed) if seed is not None else self.rng
+        rng = streams.premixed_rng(seed) if seed is not None else self.rng
         xs, ys = [], []
         for d in devices:
             idx = self.device_indices[d]
@@ -252,7 +255,7 @@ class LMClusterData:
                  seed: int = 0):
         self.lm = lm
         self.B, self.S = batch, seq
-        self.rngs = [np.random.default_rng(seed + 7 * d)
+        self.rngs = [streams.lm_device_rng(seed, d)
                      for d in range(n_devices)]
 
     def cluster_batch(self, devices: Sequence[int],
@@ -263,8 +266,12 @@ class LMClusterData:
         list (engine padding of churn-shrunk clusters) gets fresh samples
         rather than a bit-identical, double-weighted row."""
         if seed is not None:
+            # streams.lm_batch_rng tags the key (seed, 7433, i, d): the
+            # historical untagged (seed, i, d) collided with the fleet
+            # churn namespaces (seed, s, 11/13/17/19) whenever d hit one
+            # of those tags -- the collision the registry check found
             parts = [self.lm.sample(self.B, self.S,
-                                    np.random.default_rng((seed, i, d)))
+                                    streams.lm_batch_rng(seed, i, d))
                      for i, d in enumerate(devices)]
         else:
             parts = [self.lm.sample(self.B, self.S, self.rngs[d])

@@ -14,11 +14,13 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro import streams
+
 
 def synthetic_mnist(n_train: int = 50_000, n_test: int = 10_000,
                     n_classes: int = 10, hw: int = 28, seed: int = 0
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    rng = np.random.default_rng(seed)
+    rng = streams.data_rng(seed)
     yy, xx = np.meshgrid(np.linspace(-1, 1, hw), np.linspace(-1, 1, hw),
                          indexing="ij")
     protos = []
@@ -35,7 +37,7 @@ def synthetic_mnist(n_train: int = 50_000, n_test: int = 10_000,
     protos = np.stack(protos)
 
     def gen(n, seed2):
-        r = np.random.default_rng(seed2)
+        r = streams.data_rng(seed2)
         labels = r.integers(0, n_classes, n)
         imgs = protos[labels]
         # random shifts
@@ -58,7 +60,7 @@ def non_iid_split(labels: np.ndarray, n_devices: int = 30,
                   seed: int = 0) -> List[np.ndarray]:
     """Paper §VIII-A: each device gets `samples_per_device` samples from 3
     randomly chosen classes. Returns per-device index arrays."""
-    rng = np.random.default_rng(seed)
+    rng = streams.data_rng(seed)
     by_class = [np.flatnonzero(labels == c) for c in range(n_classes)]
     out = []
     for _ in range(n_devices):
@@ -80,7 +82,7 @@ class MarkovLM:
     model's (possibly huge) vocab; yields (tokens, labels) batches."""
 
     def __init__(self, vocab_size: int, eff_vocab: int = 256, seed: int = 0):
-        rng = np.random.default_rng(seed)
+        rng = streams.data_rng(seed)
         self.eff = min(eff_vocab, vocab_size)
         self.vocab_size = vocab_size
         logits = rng.normal(0, 1.5, (self.eff, self.eff))

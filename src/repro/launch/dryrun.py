@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import streams
 from repro import optim
 from repro.configs import registry
 from repro.configs.base import CPSLConfig, SHAPES, ModelConfig, ShapeCfg
@@ -221,7 +222,7 @@ def build_train(cfg: ModelConfig, shape: ShapeCfg, mesh, cut: int,
         ccfg = dataclasses.replace(ccfg, **kw)
     split = make_split_model(cfg, cut)
     cpsl = CPSL(split, ccfg)
-    state_shapes = jax.eval_shape(cpsl.init_state, jax.random.PRNGKey(0))
+    state_shapes = jax.eval_shape(cpsl.init_state, streams.warmup_key())
     sds = jax.ShapeDtypeStruct
     batch_shapes = {"tokens": sds((K, B, shape.seq_len), jnp.int32),
                     "labels": sds((K, B, shape.seq_len), jnp.int32)}
@@ -247,7 +248,7 @@ def build_train(cfg: ModelConfig, shape: ShapeCfg, mesh, cut: int,
 def build_prefill(cfg: ModelConfig, shape: ShapeCfg, mesh):
     sds = jax.ShapeDtypeStruct
     params_shapes = jax.eval_shape(lambda k: api.init(k, cfg),
-                                   jax.random.PRNGKey(0))
+                                   streams.warmup_key())
     batch_shapes = {"tokens": sds((shape.global_batch, shape.seq_len),
                                   jnp.int32)}
     if cfg.encdec:
@@ -268,13 +269,13 @@ def build_decode(cfg: ModelConfig, shape: ShapeCfg, mesh, long_ctx: bool):
     sds = jax.ShapeDtypeStruct
     gb, S = shape.global_batch, shape.seq_len
     params_shapes = jax.eval_shape(lambda k: api.init(k, cfg),
-                                   jax.random.PRNGKey(0))
+                                   streams.warmup_key())
     if cfg.encdec:
         def mkcache():
             b = {"tokens": jnp.zeros((gb, 8), jnp.int32),
                  "frames": jnp.zeros((gb, cfg.enc_seq, cfg.d_model),
                                      jnp.dtype(cfg.dtype))}
-            return whp.prefill(params := api.init(jax.random.PRNGKey(0), cfg),
+            return whp.prefill(params := api.init(streams.warmup_key(), cfg),
                                b, cfg, cap=S)[1]
         cache_shapes = jax.eval_shape(mkcache)
     else:

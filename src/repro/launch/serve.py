@@ -11,6 +11,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import streams
 from repro.configs import registry
 from repro.models import api
 from repro.serving.engine import ServeEngine
@@ -31,10 +32,10 @@ def main():
     cfg = registry.get(args.arch)
     if args.reduced:
         cfg = registry.reduce_for_smoke(cfg)
-    params = api.init(jax.random.PRNGKey(args.seed), cfg)
+    params = api.init(streams.model_key(args.seed), cfg)
     eng = ServeEngine(cfg, params, cap=args.prompt_len + args.steps)
     batch = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        streams.sampler_key(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size)}
     if cfg.encdec:
         batch["frames"] = jnp.zeros(
@@ -42,7 +43,7 @@ def main():
     t0 = time.time()
     out = eng.generate(batch, steps=args.steps,
                        temperature=args.temperature,
-                       key=jax.random.PRNGKey(2))
+                       key=streams.sampler_key(2))
     dt = time.time() - t0
     print(f"{args.arch}: {out.shape[0]}x{out.shape[1]} tokens in {dt:.2f}s"
           f" ({out.size/dt:.1f} tok/s)")

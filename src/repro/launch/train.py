@@ -15,6 +15,7 @@ import json
 import jax
 import numpy as np
 
+from repro import streams
 from repro.configs import registry
 from repro.configs.base import CPSLConfig
 from repro.core.channel import NetworkCfg
@@ -88,7 +89,7 @@ def main():
                       resource_mgmt=args.resource, log_path=args.log,
                       seed=args.seed)
     trainer = CPSLTrainer(CPSL(split, ccfg), ds, prof, ncfg, tcfg)
-    trainer.run(jax.random.PRNGKey(args.seed), v=cut)
+    trainer.run(streams.model_key(args.seed), v=cut)
     for h in trainer.history:
         print(json.dumps(h))
 

@@ -47,6 +47,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro import streams
 from repro.lifecycle import Backoff, GracefulStop, retry_sleeps
 from repro.rt import protocol as pr
 from repro.rt.faults import FaultInjector, FaultRule, InjectedDisconnect
@@ -78,8 +79,7 @@ def member_batch_indices(device_indices, members: Sequence[int], B: int,
     per (m, l), members drawn in slot order (draws are prefix-stable, so
     every worker reproduces the full cluster's stream and slices its own
     row; the server reuses the same picks for the labels)."""
-    from repro.data.pipeline import batch_seed
-    rng = np.random.default_rng(batch_seed(seed, rnd, m, l))
+    rng = streams.batch_rng(seed, rnd, m, l)
     picks = []
     for d in members:
         idx = device_indices[d]
@@ -150,7 +150,7 @@ class DeviceWorker:
         self._jnp, self._jax = jnp, jax
 
         if plan.get("warmup", True):
-            p0 = split.init_device(jax.random.PRNGKey(0))
+            p0 = split.init_device(streams.warmup_key())
             batch = {"image": jnp.zeros((self.B, 28, 28, 1), jnp.float32)}
             sm, _ = self._fwd(p0, batch)
             g0 = jnp.zeros(split.smashed_spec(self.B).shape, jnp.float32)

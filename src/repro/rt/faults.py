@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import streams
 from repro.rt.protocol import MsgType
 
 
@@ -173,7 +174,7 @@ def chaos_schedule(seed: int, rounds: int, n_devices: int,
       device is straggler-dropped for that round and rejoins at the
       next boundary.
     """
-    rng = np.random.default_rng(seed)
+    rng = streams.chaos_rng(seed)
     worker_faults: Dict[int, List[FaultRule]] = {}
     events: List[dict] = []
     for _ in range(kill_workers):

@@ -64,6 +64,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro import streams
 from repro.lifecycle import Backoff, retry_budget_s
 from repro.rt.device import build_shards, device_main
 from repro.rt.faults import FaultRule, wireless_delay_rules
@@ -191,21 +192,35 @@ class Orchestrator:
         self.cfg = cfg.validate()
         self._resume_from = resume_from
         self._inc_base = int(incarnation_base)
+        # listener/port/server are bound once in start() before the
+        # membership thread exists, then never rebound — safe to read
+        # from both threads without a lock
+        # guarded-by: none (bound in start() before the membership thread)
         self.listener: Optional[socket.socket] = None
+        # guarded-by: none (bound in start() before the membership thread)
         self.port: Optional[int] = None
-        self.procs: List[mp.Process] = []
+        self.procs: List[mp.Process] = []           # guarded-by: _mem_lock
+        # guarded-by: none (bound in start() before the membership thread)
         self.server: Optional[RTServer] = None
         self.writer = TraceWriter(cfg.trace_path,
                                   fresh=(resume_from is None),
                                   fsync=cfg.wal_dir is not None)
         self.metrics: List[dict] = []
+        # guarded-by: none (bound in start() before the membership thread)
         self.start_round = 0
+        # written by the main round loop, read by the membership REJOIN
+        # handshake; the rejoin protocol tolerates one-round staleness
+        # guarded-by: none (GIL-atomic int snapshot)
         self._next_round = 0
         self._ctx = mp.get_context("spawn")  # workers re-init jax cleanly
-        self._spawned: Dict[int, mp.Process] = {}
-        self._incarnations: Dict[int, int] = {}
-        self._respawn_at: Dict[int, float] = {}
-        self._backoffs: Dict[int, Backoff] = {}
+        # Worker bookkeeping is written by BOTH the main thread
+        # (start/stop) and the membership thread (_membership_tick), so
+        # every access holds _mem_lock.
+        self._mem_lock = threading.Lock()
+        self._spawned: Dict[int, mp.Process] = {}   # guarded-by: _mem_lock
+        self._incarnations: Dict[int, int] = {}     # guarded-by: _mem_lock
+        self._respawn_at: Dict[int, float] = {}     # guarded-by: _mem_lock
+        self._backoffs: Dict[int, Backoff] = {}     # guarded-by: _mem_lock
         self._rostered: Set[int] = set()
         self._arrival_waited: Set[int] = set()
         self._mem_stop = threading.Event()
@@ -222,7 +237,7 @@ class Orchestrator:
         self.ncfg = NetworkCfg(n_devices=cfgN, n_subcarriers=self.C)
         mu_f, mu_snr = device_means(self.ncfg, seed=cfg.seed)
         self.net = sample_network(self.ncfg, mu_f, mu_snr,
-                                  np.random.default_rng(cfg.seed))
+                                  streams.network_draw_rng(cfg.seed))
         self._equal_split_x = equal_split_x
         self._round_latency = round_latency
 
@@ -287,8 +302,13 @@ class Orchestrator:
     # -- membership ------------------------------------------------------
 
     def _spawn_worker(self, gid: int):
+        """Called from start() (main) AND _membership_tick (membership
+        thread) — all worker bookkeeping under _mem_lock; the slow
+        Process.start() stays outside it."""
         cfg = self.cfg
-        inc = max(self._incarnations.get(gid, -1) + 1, self._inc_base)
+        with self._mem_lock:
+            inc = max(self._incarnations.get(gid, -1) + 1, self._inc_base)
+            self._incarnations[gid] = inc
         wcfg = {"host": cfg.host, "port": self.port, "device": gid,
                 "incarnation": inc,
                 "faults": self._faults.get(gid, []),
@@ -302,9 +322,9 @@ class Orchestrator:
                 "reconnect_timeout_s": cfg.reconnect_timeout_s}
         p = self._ctx.Process(target=device_main, args=(wcfg,), daemon=True)
         p.start()
-        self._spawned[gid] = p
-        self._incarnations[gid] = inc
-        self.procs.append(p)
+        with self._mem_lock:
+            self._spawned[gid] = p
+            self.procs.append(p)
 
     def _handshake(self, sock: socket.socket):
         """One incoming connection: REGISTER (fresh worker — needs the
@@ -340,23 +360,26 @@ class Orchestrator:
             a = self._arrival(gid)
             if a > self.start_round and self._next_round < a - 1:
                 continue                      # arrival not due yet
-            p = self._spawned.get(gid)
+            with self._mem_lock:
+                p = self._spawned.get(gid)
             if p is not None and p.is_alive():
                 continue
             if p is None:
-                if gid in self.server.channels \
-                        and gid not in self.server.dead:
+                if self.server.is_attached_live(gid):
                     continue                  # orphan rejoined: alive
                 if a > self.start_round:
                     self._spawn_worker(gid)   # late arrival, first spawn
                     continue
-            if not cfg.respawn or now < self._respawn_at.get(gid, 0.0):
+            with self._mem_lock:
+                due = cfg.respawn and now >= self._respawn_at.get(gid, 0.0)
+            if not due:
                 continue
             self._spawn_worker(gid)
-            self._respawn_at[gid] = time.monotonic() + \
-                self._backoffs.setdefault(
-                    gid, Backoff(cfg.respawn_backoff_s,
-                                 cfg.backoff_max_s)).next()
+            with self._mem_lock:
+                self._respawn_at[gid] = time.monotonic() + \
+                    self._backoffs.setdefault(
+                        gid, Backoff(cfg.respawn_backoff_s,
+                                     cfg.backoff_max_s)).next()
 
     def _membership(self):
         self.listener.settimeout(0.2)
@@ -404,6 +427,7 @@ class Orchestrator:
         self._next_round = self.start_round
         self._rostered = {g for g in range(cfg.n_devices)
                           if self._arrival(g) <= self.start_round}
+        # guarded-by: none (bound in start() before the membership thread)
         self._faults = self._worker_faults()
 
         self.listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -412,6 +436,7 @@ class Orchestrator:
         self.listener.listen(cfg.n_devices + 4)
         self.port = self.listener.getsockname()[1]
 
+        # guarded-by: none (bound in start() before the membership thread)
         self._plan_msg = {"model": "lenet", "v": cfg.cut,
                           "local_epochs": cfg.local_epochs,
                           "batch": cfg.batch,
@@ -424,7 +449,9 @@ class Orchestrator:
         resume = self._resume_from is not None
         now = time.monotonic()
         grace = cfg.rejoin_grace_s if resume else 0.0
-        self._respawn_at = {g: now + grace for g in range(cfg.n_devices)}
+        with self._mem_lock:
+            self._respawn_at = {g: now + grace
+                                for g in range(cfg.n_devices)}
         if not resume:
             for gid in sorted(self._rostered):
                 self._spawn_worker(gid)
@@ -481,9 +508,11 @@ class Orchestrator:
                 self.server.shutdown(linger_s)
             except Exception:
                 pass
-        for p in self.procs:
+        with self._mem_lock:
+            procs = list(self.procs)
+        for p in procs:
             p.join(timeout=5.0)
-        for p in self.procs:
+        for p in procs:
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=2.0)
@@ -567,7 +596,7 @@ def run_elastic(cfg: RTConfig, max_restarts: int = 5):
     from repro.core.cpsl import CPSL
     from repro.core.splitting import make_split_model
     cpsl = CPSL(make_split_model("lenet", cfg.cut), cfg.ccfg())
-    st0 = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
+    st0 = cpsl.init_state(streams.model_key(cfg.seed))
     template = {"state": jax.tree.map(jnp.zeros_like, st0),
                 "round": jnp.zeros((), jnp.int32)}
     restored = Checkpointer(cfg.wal_dir, keep=cfg.wal_keep).restore(
@@ -594,7 +623,7 @@ def loopback_reference(cfg: RTConfig, zero_weight=None):
 
     x, y, shards = build_shards(cfg.data_spec())
     cpsl = CPSL(make_split_model("lenet", cfg.cut), cfg.ccfg())
-    state = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
+    state = cpsl.init_state(streams.model_key(cfg.seed))
     ds = CPSLDataset(x, y, shards, cfg.batch)
     K = cfg.cluster_size
     clusters = [list(range(m * K, min((m + 1) * K, cfg.n_devices)))

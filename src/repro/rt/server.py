@@ -57,6 +57,7 @@ from typing import Dict, List, Optional, Set
 
 import numpy as np
 
+from repro import streams
 from repro.rt import protocol as pr
 from repro.rt.device import member_batch_indices
 from repro.rt.protocol import MsgType
@@ -104,22 +105,35 @@ class RTServer:
 
         self._server_phase = jax.jit(_server_phase)
 
-        self.state = cpsl.init_state(jax.random.PRNGKey(cfg.seed))
+        # guarded-by: main-thread
+        self.state = cpsl.init_state(streams.model_key(cfg.seed))
+        # the membership REJOIN handshake reads this cross-thread; the
+        # rejoin protocol tolerates one-round staleness
+        # guarded-by: none (GIL-atomic int snapshot)
         self._step = int(self.state["step"])
         self.wal = wal
 
-        # connection registry
-        self.channels: Dict[int, object] = {}
+        # Connection roster. channels/last_seen/dead are written by the
+        # orchestrator's membership thread (attach) while the main
+        # round-driver thread reads them, so every access holds
+        # _roster_lock (RLock: _send -> _mark_dead nests). Reader threads
+        # never touch the roster — they only enqueue to inbox.
+        self._roster_lock = threading.RLock()
+        self.channels: Dict[int, object] = {}   # guarded-by: _roster_lock
         self.inbox: "queue.Queue" = queue.Queue()
-        self.last_seen: Dict[int, float] = {}
-        self.dead: Set[int] = set()          # connection lost (a later
-                                             # re-attach revives the gid)
-        self.ready: Set[int] = set()         # READY seen on the current
-                                             # connection
-        self._round_dropped: Set[int] = set()
-        self._round_recovered: Set[int] = set()
-        self._grad_cache: Dict[tuple, dict] = {}
-        self._ack_cache: Set[tuple] = set()
+        self.last_seen: Dict[int, float] = {}   # guarded-by: _roster_lock
+        # dead = connection lost (a later re-attach revives the gid)
+        self.dead: Set[int] = set()             # guarded-by: _roster_lock
+        # ready = READY seen on the current connection; only the main
+        # thread pumps the inbox, so READY handling is main-only
+        self.ready: Set[int] = set()            # guarded-by: main-thread
+        self._round_dropped: Set[int] = set()   # guarded-by: main-thread
+        self._round_recovered: Set[int] = set()  # guarded-by: main-thread
+        # GRAD/ACK replay caches: written and read exclusively by the
+        # main thread's inbox pump (reader threads only inbox.put) —
+        # tests/test_rt_threading.py pins this root set
+        self._grad_cache: Dict[tuple, dict] = {}  # guarded-by: main-thread
+        self._ack_cache: Set[tuple] = set()       # guarded-by: main-thread
 
     # -- crash-resume ----------------------------------------------------
 
@@ -146,19 +160,22 @@ class RTServer:
 
     # -- connections -----------------------------------------------------
 
+    # called-from: membership
     def attach(self, gid: int, channel):
         """Register a device channel and start its reader thread. A
         re-attach (REJOIN after a crash) replaces the old channel and
-        revives the gid."""
-        old = self.channels.get(gid)
+        revives the gid. Called from the orchestrator's membership
+        thread concurrently with the main thread's round drive."""
+        with self._roster_lock:
+            old = self.channels.get(gid)
+            self.channels[gid] = channel
+            self.last_seen[gid] = time.monotonic()
+            self.dead.discard(gid)
         if old is not None and old is not channel:
             try:
                 old.close()
             except Exception:
                 pass
-        self.channels[gid] = channel
-        self.last_seen[gid] = time.monotonic()
-        self.dead.discard(gid)
 
         def reader():
             while True:
@@ -175,21 +192,31 @@ class RTServer:
         threading.Thread(target=reader, daemon=True).start()
 
     def _send(self, gid: int, mtype: MsgType, payload):
-        if gid in self.dead:
-            return
-        ch = self.channels.get(gid)
+        with self._roster_lock:
+            if gid in self.dead:
+                return
+            ch = self.channels.get(gid)
         if ch is None:          # planned but never connected (arrival)
             self._mark_dead(gid)
             return
         try:
+            # blocking I/O stays outside the roster lock so a slow
+            # socket never stalls the membership thread's attach
             ch.send(mtype, payload)
         except (pr.ProtocolError, OSError):
             self._mark_dead(gid)
 
     def _mark_dead(self, gid: int):
-        if gid not in self.dead:
+        with self._roster_lock:
             self.dead.add(gid)
         self.ready.discard(gid)
+
+    # called-from: membership
+    def is_attached_live(self, gid: int) -> bool:
+        """Roster snapshot for the orchestrator's membership tick: True
+        iff ``gid`` has a registered channel and is not dead."""
+        with self._roster_lock:
+            return gid in self.channels and gid not in self.dead
 
     # -- warmup ----------------------------------------------------------
 
@@ -220,10 +247,13 @@ class RTServer:
         heartbeats update liveness, cached retransmits are replayed,
         the rest is ERRORed so devices stop retrying."""
         if mtype is None:
-            if payload is None or payload is self.channels.get(gid):
+            with self._roster_lock:
+                cur = self.channels.get(gid)
+            if payload is None or payload is cur:
                 self._mark_dead(gid)
             return
-        self.last_seen[gid] = time.monotonic()
+        with self._roster_lock:
+            self.last_seen[gid] = time.monotonic()
         if mtype == MsgType.READY:
             self.ready.add(gid)
             return
@@ -261,7 +291,8 @@ class RTServer:
         def handle(gid, mtype, payload):
             if mtype is not None and gid in want \
                     and accept(gid, mtype, payload):
-                self.last_seen[gid] = time.monotonic()
+                with self._roster_lock:
+                    self.last_seen[gid] = time.monotonic()
                 if gid not in got:
                     got[gid] = payload
                     if on_accept is not None:
@@ -284,11 +315,13 @@ class RTServer:
         t0 = time.monotonic()
         hard = t0 + cfg.phase_timeout_s
         while True:
-            missing = want - set(got) - self.dead
-            if cfg.straggler_policy == "drop":
-                now = time.monotonic()
-                missing = {g for g in missing
-                           if now - self.last_seen[g] <= cfg.hb_timeout_s}
+            with self._roster_lock:
+                missing = want - set(got) - self.dead
+                if cfg.straggler_policy == "drop":
+                    now = time.monotonic()
+                    missing = {g for g in missing
+                               if now - self.last_seen[g]
+                               <= cfg.hb_timeout_s}
             if not missing:
                 break
             left = hard - time.monotonic()
@@ -307,7 +340,11 @@ class RTServer:
         warmup); devices that never do are dead to the run."""
         ready: Set[int] = set()
         deadline = time.monotonic() + timeout
-        while want - ready - self.dead:
+        while True:
+            with self._roster_lock:
+                pending = want - ready - self.dead
+            if not pending:
+                break
             left = deadline - time.monotonic()
             if left <= 0:
                 break
@@ -319,10 +356,13 @@ class RTServer:
             if mtype == MsgType.READY:
                 ready.add(gid)
                 self.ready.add(gid)
-                self.last_seen[gid] = time.monotonic()
+                with self._roster_lock:
+                    self.last_seen[gid] = time.monotonic()
             else:
                 self._handle_stray(gid, mtype, payload, "warmup")
-        for gid in want - ready - self.dead:
+        with self._roster_lock:
+            lost = want - ready - self.dead
+        for gid in lost:
             self._mark_dead(gid)
         return ready
 
@@ -335,7 +375,9 @@ class RTServer:
         passes."""
         deadline = time.monotonic() + timeout_s
         while True:
-            if all(g in self.ready and g not in self.dead for g in gids):
+            with self._roster_lock:
+                none_dead = not (set(gids) & self.dead)
+            if none_dead and all(g in self.ready for g in gids):
                 return True
             left = deadline - time.monotonic()
             if left <= 0:
@@ -402,7 +444,8 @@ class RTServer:
         K, B, L = len(members), cpsl.ccfg.batch_per_device, \
             cpsl.ccfg.local_epochs
         st = self.state
-        cluster_dead = {g for g in members if g in self.dead}
+        with self._roster_lock:
+            cluster_dead = {g for g in members if g in self.dead}
         if allow_retry and cluster_dead:
             raise _ClusterRetry(cluster_dead)
 
@@ -430,7 +473,9 @@ class RTServer:
 
             got = self._collect(want, accept, f"r{rnd}m{m}l{l}")
             missing = want - set(got)
-            if allow_retry and missing and missing <= self.dead:
+            with self._roster_lock:
+                all_died = missing <= self.dead
+            if allow_retry and missing and all_died:
                 raise _ClusterRetry(missing)
             for gid in want:
                 if gid in got:
@@ -506,7 +551,9 @@ class RTServer:
 
         got = self._collect(want, accept_agg, f"r{rnd}m{m}agg", on_agg)
         missing = want - set(got)
-        if allow_retry and missing and missing <= self.dead:
+        with self._roster_lock:
+            all_died = missing <= self.dead
+        if allow_retry and missing and all_died:
             raise _ClusterRetry(missing)
         for gid in missing:
             cluster_dead.add(gid)
@@ -533,8 +580,10 @@ class RTServer:
         if any(x > 0 for x in w):
             st = self.cpsl.fedavg(st, np.asarray(w, np.float32))
         self.state = st
-        self._round_dropped.update(cluster_dead - self.dead)
-        self._round_dropped.update(set(members) & self.dead)
+        with self._roster_lock:
+            dead_now = set(self.dead)
+        self._round_dropped.update(cluster_dead - dead_now)
+        self._round_dropped.update(set(members) & dead_now)
         return losses
 
     def run_round(self, rnd: int, plan, net=None) -> dict:
@@ -558,8 +607,10 @@ class RTServer:
         wall = time.monotonic() - t0
         loss = (float(jnp.mean(jnp.stack(losses))) if losses else None)
         dropped = sorted(self._round_dropped)
+        with self._roster_lock:
+            n_dead = len(self.dead)
         rec = {"round": rnd, "v": plan.v, "stale": plan.stale,
-               "n_active": len(plan.ids) - len(self.dead),
+               "n_active": len(plan.ids) - n_dead,
                "ids": plan.ids,
                "clusters": [list(c) for c in plan.clusters],
                "clusters_global": clusters_global,
@@ -579,11 +630,17 @@ class RTServer:
     # -- teardown --------------------------------------------------------
 
     def shutdown(self, linger_s: float = 3.0):
-        for gid in list(self.channels):
+        with self._roster_lock:
+            gids = list(self.channels)
+        for gid in gids:
             self._send(gid, MsgType.SHUTDOWN, {})
         deadline = time.monotonic() + linger_s
         bye = set()
-        while len(bye) < len(self.channels) - len(self.dead):
+        while True:
+            with self._roster_lock:
+                n_live = len(self.channels) - len(self.dead)
+            if len(bye) >= n_live:
+                break
             left = deadline - time.monotonic()
             if left <= 0:
                 break
@@ -593,5 +650,7 @@ class RTServer:
                 continue
             if mtype == MsgType.BYE:
                 bye.add(gid)
-        for ch in self.channels.values():
+        with self._roster_lock:
+            chans = list(self.channels.values())
+        for ch in chans:
             ch.close()

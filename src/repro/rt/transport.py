@@ -78,7 +78,9 @@ class Channel:
         self.injector = injector
         self.round_fn = round_fn or (lambda: None)
         self._send_lock = threading.Lock()
-        self._closed = False
+        # senders (main + heartbeat thread) race close(): both the flag
+        # and the socket writes serialize on _send_lock
+        self._closed = False       # guarded-by: _send_lock
 
     # -- send ------------------------------------------------------------
 

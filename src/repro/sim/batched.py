@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import streams
 from repro.core import resource as rs
 from repro.core.channel import NetworkCfg, NetworkState
 from repro.core.latency import (BatchedClusterEvaluator, CutProfile,
@@ -88,8 +89,9 @@ def gibbs_clustering_batched(*args, **kw):
 def _chain_rng(seed: int, chain: int) -> np.random.Generator:
     """Per-chain RNG streams (see module docstring): chain 0 is
     ``default_rng(seed)`` — the single-chain stream — chain c > 0 is
-    ``default_rng((seed, c))``. Prefix-stable in the chain count."""
-    return np.random.default_rng(seed if chain == 0 else (int(seed), chain))
+    ``default_rng((seed, c))``. Prefix-stable in the chain count.
+    Registered as the `chain` stream in ``repro.streams``."""
+    return streams.chain_rng(seed, chain)
 
 
 def _greedy_group(tasks, net: NetworkState, ncfg: NetworkCfg,
@@ -353,10 +355,9 @@ def _bucket_chain_rng(seed: int, bucket: int, chain: int
     hierarchical planner replays ``gibbs_clustering_multichain``
     bit-for-bit — and bucket b > 0 draws from
     ``default_rng((seed, 6151, b, c))``, a namespace disjoint from every
-    flat-planner stream (6151 is an arbitrary fixed tag)."""
-    if bucket == 0:
-        return _chain_rng(seed, chain)
-    return np.random.default_rng((int(seed), 6151, int(bucket), int(chain)))
+    flat-planner stream (6151 is an arbitrary fixed tag).  Registered
+    as the `bucket_chain` stream in ``repro.streams``."""
+    return streams.bucket_chain_rng(seed, bucket, chain)
 
 
 @dataclass
@@ -488,7 +489,7 @@ def saa_cut_selection_batched(prof: CutProfile, ncfg: NetworkCfg, B: int,
         mu_f, mu_snr = means_override
     else:
         mu_f, mu_snr = rs.device_means(ncfg, seed)
-    rng = np.random.default_rng(seed + 1)
+    rng = streams.saa_network_rng(seed)
     nets = [rs.sample_network(ncfg, mu_f, mu_snr, rng)
             for _ in range(n_samples)]
     cuts = list(cuts) if cuts is not None else list(range(1, prof.n_cuts + 1))

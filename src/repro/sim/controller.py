@@ -23,6 +23,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import streams
 from repro.configs.base import SimCfg
 from repro.core import resource as rs
 from repro.core.channel import NetworkCfg, NetworkState
@@ -207,7 +208,7 @@ class TwoTimescaleController:
                 self.v, net, self._ncfg_for(n), self.prof, self.B, self.L,
                 n_clusters=len(sizes), cluster_size=max(sizes),
                 iters=self.scfg.gibbs_iters,
-                seed=(seed if c == 0 else (seed, c)),
+                seed=streams.chain_key(seed, c),
                 sizes=sizes, spectrum_fn=self.spectrum_fn)
                 for c in range(chains)]
             clusters, xs, lat = results[int(np.argmin(

@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import streams
 from repro.core.channel import NetworkCfg, NetworkState, device_means
 
 
@@ -79,7 +80,7 @@ class NetworkProcess:
         # seed + 1: device_means consumes default_rng(seed); reusing the
         # same stream would couple the means to the fading innovations
         # (same convention as core.resource.saa_cut_selection)
-        self.rng = np.random.default_rng(dcfg.seed + 1)
+        self.rng = streams.dynamics_rng(dcfg.seed)
         mu_f, mu_snr = device_means(ncfg, dcfg.seed)
         self.mu_f = np.array(mu_f, dtype=np.float64)
         self.mu_snr = np.array(mu_snr, dtype=np.float64)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import streams
 from repro.configs.base import CPSLConfig, SimCfg
 from repro.core import latency as lt
 from repro.core.channel import NetworkCfg
@@ -145,7 +146,7 @@ class SimEngine:
     # -- main loop ------------------------------------------------------------
 
     def run(self, key=None):
-        key = key if key is not None else jax.random.PRNGKey(self.scfg.seed)
+        key = key if key is not None else streams.model_key(self.scfg.seed)
         # fresh trace per run — carrying over records (in memory or on
         # disk) would interleave stale rounds into downstream recomputation
         self.trace = []

@@ -69,6 +69,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro import streams
 from repro.configs.base import SimFleetCfg
 from repro.core import latency as lt
 from repro.core.channel import NetworkCfg, NetworkState, device_means
@@ -186,7 +187,12 @@ def _greedy_xs(cst_b, fd, rd, mask, csize, *, C: int, B: int, L: int,
         return X + inc * allowed[..., None]
 
     X0 = jnp.ones((E, M, K), dtype=jnp.int32)
-    return jax.lax.fori_loop(0, C - 1, body, X0)
+    # scan over a strongly-typed index instead of fori_loop: jax lowers
+    # static-bound fori_loop with a weak int64 counter in the scan carry
+    # under x64 — a recompile hazard the jit audit (JIT004) rejects
+    X, _ = jax.lax.scan(lambda Xc, i: (body(i, Xc), None), X0,
+                        jnp.arange(C - 1, dtype=jnp.int32))
+    return X
 
 
 # --------------------------------------------------------------------------
@@ -660,7 +666,7 @@ class SimFleetRunner:
                     # reserve-device means, pre-drawn (NetworkProcess
                     # draws arrivals' means from its live stream; the
                     # fleet fixes them up front, per mean seed)
-                    r = np.random.default_rng((ms, 9967))
+                    r = streams.fleet_reserve_means_rng(ms)
                     if ncfg.homogeneous:
                         rf = np.full(n_res, float(ncfg.f_homog))
                         rs_ = np.full(n_res, float(ncfg.snr_homog_db))
@@ -681,7 +687,7 @@ class SimFleetRunner:
         # per-episode innovation streams keyed by the episode SEED (same
         # seed -> same realization: CRN coupling across cuts/policies)
         with enable_x64():
-            master = jax.random.PRNGKey(dcfg.seed)
+            master = streams.fleet_master_key(dcfg.seed)
             draws = {}
             for sp in self.specs:
                 s = sp["seed"]
@@ -774,12 +780,12 @@ class SimFleetRunner:
         # pre-drawn uniforms, per episode seed (CRN across same-seed
         # arms; distinct fixed stream ids keep them independent)
         if dcfg.p_depart > 0:
-            ud = {s: np.random.default_rng((dcfg.seed, s, 11)
-                                           ).random((T, N)) for s in seeds}
+            ud = {s: streams.fleet_departures_rng(dcfg.seed, s)
+                  .random((T, N)) for s in seeds}
             self._u_dep = np.stack([ud[sp["seed"]] for sp in self.specs],
                                    axis=1)                    # (T, E, N)
         if dcfg.p_arrive > 0:
-            ua = {s: np.random.default_rng((dcfg.seed, s, 13)).random(T)
+            ua = {s: streams.fleet_arrivals_rng(dcfg.seed, s).random(T)
                   for s in seeds}
             self._u_arr = np.stack([ua[sp["seed"]] for sp in self.specs],
                                    axis=1)                    # (T, E)
@@ -788,7 +794,7 @@ class SimFleetRunner:
             R, Gi = self.R, fcfg.gibbs_iters
             gd = {}
             for s in seeds:
-                r = np.random.default_rng((dcfg.seed, s, 17))
+                r = streams.fleet_gibbs_rng(dcfg.seed, s)
                 gd[s] = (r.random((T, R, N)), r.random((T, R, Gi, 5)))
             self._gkey = np.stack(
                 [gd[self.specs[e]["seed"]][0] for e in self._prows],
@@ -801,7 +807,7 @@ class SimFleetRunner:
             J, S = fcfg.saa_samples, fcfg.saa_gibbs_iters
             sd = {}
             for s in seeds:
-                r = np.random.default_rng((dcfg.seed, s, 19))
+                r = streams.fleet_saa_rng(dcfg.seed, s)
                 sd[s] = (r.standard_normal((n_ep, J, 2, N)),
                          r.random((n_ep, J, self.R, N)),
                          r.random((n_ep, J, self.R, S, 5)))
@@ -835,31 +841,39 @@ class SimFleetRunner:
 
     # -- batched dispatch -----------------------------------------------------
 
+    def sim_inputs(self) -> dict:
+        """The ``_sim`` argument dict (x64 device arrays).  Split out of
+        ``run`` so static tooling (``repro.analysis.jit_audit``) can
+        lower the exact program ``run`` dispatches without executing it.
+        Call under ``enable_x64()`` — the cost model's contract dtype."""
+        data = {"mu_f": jnp.asarray(self._mu_f),
+                "mu_snr": jnp.asarray(self._mu_snr),
+                "eta_f0": jnp.asarray(self._eta_f0),
+                "eta_s0": jnp.asarray(self._eta_s0),
+                "eps_f": jnp.asarray(self._eps_f),
+                "eps_s": jnp.asarray(self._eps_s),
+                "cst_full": {k: jnp.asarray(v)
+                             for k, v in self._cst_full.items()},
+                "Ktgt": jnp.asarray(self._Ktgt),
+                "layout_mode": jnp.asarray(self._mode),
+                "perm_rank": jnp.asarray(self._perm_rank),
+                "depart": jnp.asarray(self._depart),
+                "arrive": jnp.asarray(self._arrive),
+                "energy0": jnp.asarray(self._energy0),
+                "v0": jnp.asarray(self._v0)}
+        for name in ("u_dep", "u_arr", "gkey", "gprop",
+                     "saa_eta", "saa_key", "saa_prop"):
+            arr = getattr(self, "_" + name, None)
+            if arr is not None:
+                data[name] = jnp.asarray(arr)
+        return data
+
     def run(self) -> dict:
         """One jitted dispatch for the whole grid. Returns ``{"episodes":
         [spec + latency_s/sim_time_s/n_active curves], "trace": {episode-
         major arrays}, "wall_s"}``."""
         with enable_x64():
-            data = {"mu_f": jnp.asarray(self._mu_f),
-                    "mu_snr": jnp.asarray(self._mu_snr),
-                    "eta_f0": jnp.asarray(self._eta_f0),
-                    "eta_s0": jnp.asarray(self._eta_s0),
-                    "eps_f": jnp.asarray(self._eps_f),
-                    "eps_s": jnp.asarray(self._eps_s),
-                    "cst_full": {k: jnp.asarray(v)
-                                 for k, v in self._cst_full.items()},
-                    "Ktgt": jnp.asarray(self._Ktgt),
-                    "layout_mode": jnp.asarray(self._mode),
-                    "perm_rank": jnp.asarray(self._perm_rank),
-                    "depart": jnp.asarray(self._depart),
-                    "arrive": jnp.asarray(self._arrive),
-                    "energy0": jnp.asarray(self._energy0),
-                    "v0": jnp.asarray(self._v0)}
-            for name in ("u_dep", "u_arr", "gkey", "gprop",
-                         "saa_eta", "saa_key", "saa_prop"):
-                arr = getattr(self, "_" + name, None)
-                if arr is not None:
-                    data[name] = jnp.asarray(arr)
+            data = self.sim_inputs()
             t0 = time.monotonic()
             ys = self._sim(data)
             jax.block_until_ready(ys["latency"])

@@ -1,0 +1,386 @@
+"""Central RNG-stream registry: every random stream in the repo.
+
+The repo's bit-exactness contracts (fleet-vs-host decision identity,
+chain-0 == flat-plan equivalence, WAL crash-resume) all rest on
+*prefix-stable namespaces*: ``np.random.default_rng`` seeded with an
+int or a tuple key, where distinct subsystems own provably disjoint
+key patterns.  This module is the single place those namespaces are
+declared; every construction site in ``src/`` goes through one of the
+constructors below, and ``repro.analysis.rng_lint`` statically rejects
+any ``default_rng(...)`` / ``jax.random.PRNGKey(...)`` call outside
+this file whose key is not a literal matching a registered pattern.
+
+Pools
+-----
+``tuple``   SeedSequence tuple keys.  Patterns are declared with
+            literal ints and ``Sym`` placeholders; ``registry_overlaps``
+            proves pairwise disjointness (same-length patterns whose
+            positions can all simultaneously collide are an error).
+            NOTE: numpy's SeedSequence hashes ``default_rng(s)`` and
+            ``default_rng((s,))`` to the *same* stream, so length-1
+            tuple patterns are banned (they would silently alias the
+            scalar pool).
+``scalar``  plain-int seeds.  These share one key space and are
+            disambiguated by documented arithmetic offsets (e.g.
+            dynamics consumes ``seed + 1`` because ``device_means``
+            consumed ``seed``); the registry records them but exempts
+            them from the disjointness proof -- see INVARIANTS.md.
+``jax``     ``jax.random.PRNGKey`` roots.  Disjointness inside a key
+            root is by downstream ``fold_in``/``split`` discipline,
+            not by this registry.
+
+Constructors are bit-exactness-tested per stream in
+``tests/test_streams.py``: each must reproduce the raw key it
+replaced, byte-for-byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "Sym", "StreamSpec", "REGISTRY", "registry_overlaps",
+    # tuple pool
+    "CHAIN_MAX", "chain_key", "chain_rng", "bucket_chain_rng",
+    "fleet_reserve_means_rng", "fleet_departures_rng",
+    "fleet_arrivals_rng", "fleet_gibbs_rng", "fleet_saa_rng",
+    "lm_batch_rng",
+    # scalar pool
+    "batch_seed", "batch_rng", "premixed_rng", "data_rng",
+    "network_means_rng", "network_draw_rng", "dynamics_rng",
+    "gibbs_rng", "layout_rng", "saa_network_rng", "trainer_round_rng",
+    "lm_device_rng", "curve_rng", "chaos_rng",
+    # jax pool
+    "model_key", "fleet_master_key", "sampler_key", "warmup_key",
+]
+
+
+# --------------------------------------------------------------------------
+# registry machinery
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Sym:
+    """A free position in a tuple key pattern: any int in [lo, hi)."""
+    name: str
+    lo: int = 0
+    hi: Optional[int] = None  # exclusive; None = unbounded
+
+    def intersects(self, other: Union[int, "Sym"]) -> bool:
+        if isinstance(other, Sym):
+            lo = max(self.lo, other.lo)
+            his = [h for h in (self.hi, other.hi) if h is not None]
+            return lo < min(his) if his else True
+        return self.lo <= other and (self.hi is None or other < self.hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One registered stream namespace."""
+    name: str
+    pool: str                                   # "tuple" | "scalar" | "jax"
+    key: Tuple[Union[int, Sym], ...]            # tuple pool: the pattern
+    doc: str
+
+
+def _positions_intersect(a, b) -> bool:
+    if isinstance(a, Sym):
+        return a.intersects(b)
+    if isinstance(b, Sym):
+        return b.intersects(a)
+    return a == b
+
+
+REGISTRY = {}
+
+
+def _register(spec: StreamSpec) -> StreamSpec:
+    assert spec.name not in REGISTRY, spec.name
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def registry_overlaps(registry=None):
+    """Prove the tuple pool disjoint.  Returns a list of human-readable
+    problems (empty == proven): pairwise same-length tuple patterns
+    whose every position can simultaneously collide, plus banned
+    length-1 tuple patterns (SeedSequence aliases ``(s,)`` to ``s``, so
+    a 1-tuple pattern would silently collide with the scalar pool)."""
+    registry = REGISTRY if registry is None else registry
+    problems = []
+    tuples = [s for s in registry.values() if s.pool == "tuple"]
+    for s in tuples:
+        if len(s.key) < 2:
+            problems.append(
+                f"{s.name}: length-{len(s.key)} tuple pattern is banned "
+                "(SeedSequence hashes (s,) and s identically)")
+    for i, a in enumerate(tuples):
+        for b in tuples[i + 1:]:
+            if len(a.key) != len(b.key):
+                continue
+            if all(_positions_intersect(x, y)
+                   for x, y in zip(a.key, b.key)):
+                problems.append(
+                    f"{a.name} and {b.name}: patterns {a.key} / {b.key} "
+                    "can collide")
+    return problems
+
+
+# --------------------------------------------------------------------------
+# tuple pool -- provably disjoint namespaces
+# --------------------------------------------------------------------------
+
+#: Chain indices are bounded so the ``(seed, chain)`` pattern is
+#: provably disjoint from every tagged pattern (tags are primes
+#: >= 6151 > CHAIN_MAX).  Real configs use <= 8 Gibbs chains.
+CHAIN_MAX = 4096
+
+_register(StreamSpec(
+    "chain", "tuple", (Sym("seed"), Sym("chain", 1, CHAIN_MAX)),
+    "Gibbs chain c >= 1 of the multi-chain planner; chain 0 is the "
+    "flat scalar stream default_rng(seed) (decision-identity anchor: "
+    "chain 0 must reproduce the single-chain planner bit-for-bit)."))
+_register(StreamSpec(
+    "bucket_chain", "tuple",
+    (Sym("seed"), 6151, Sym("bucket", 1), Sym("chain")),
+    "Hierarchical planner: chain c of bucket b >= 1; bucket 0 "
+    "delegates to the flat `chain` stream (bucket-0 == flat-plan "
+    "bit-equality contract)."))
+_register(StreamSpec(
+    "fleet_reserve_means", "tuple", (Sym("mean_seed"), 9967),
+    "Per-mean-seed channel means for the simulated fleet's reserve "
+    "pool (sim/fleet.py)."))
+_register(StreamSpec(
+    "fleet_departures", "tuple", (Sym("seed"), Sym("episode"), 11),
+    "Per-episode departure uniforms for fleet churn (shared by the "
+    "in-jit fleet and the host oracle -- decision identity)."))
+_register(StreamSpec(
+    "fleet_arrivals", "tuple", (Sym("seed"), Sym("episode"), 13),
+    "Per-episode arrival uniforms for fleet churn."))
+_register(StreamSpec(
+    "fleet_gibbs", "tuple", (Sym("seed"), Sym("episode"), 17),
+    "Per-episode Gibbs proposal draws for the fleet's in-jit "
+    "clustering (mirrored by the host oracle)."))
+_register(StreamSpec(
+    "fleet_saa", "tuple", (Sym("seed"), Sym("episode"), 19),
+    "Per-episode SAA innovation/proposal draws for the fleet's "
+    "cut selection."))
+_register(StreamSpec(
+    "lm_batch", "tuple", (Sym("seed"), 7433, Sym("slot"), Sym("device")),
+    "Seeded LM pipeline batch draws, per (slot, device).  Tagged 7433: "
+    "the historical untagged (seed, i, d) key collided with the fleet "
+    "churn namespaces whenever d hit 11/13/17/19 -- the collision the "
+    "registry check turned up."))
+
+# fleet episode tags, shared with sim/fleet.py's host oracle
+FLEET_DEPART_TAG, FLEET_ARRIVE_TAG = 11, 13
+FLEET_GIBBS_TAG, FLEET_SAA_TAG = 17, 19
+FLEET_RESERVE_TAG, BUCKET_TAG, LM_TAG = 9967, 6151, 7433
+
+
+def chain_key(seed: int, chain: int):
+    """The raw key for Gibbs chain ``chain``: ``seed`` itself for chain
+    0 (the flat stream), ``(seed, chain)`` otherwise.  Returned (not
+    just consumed) because planner code threads the key through
+    ``gibbs_clustering(seed=...)``."""
+    if chain == 0:
+        return seed
+    assert 0 < chain < CHAIN_MAX, chain
+    return (int(seed), int(chain))
+
+
+def chain_rng(seed: int, chain: int) -> np.random.Generator:
+    return np.random.default_rng(chain_key(seed, chain))
+
+
+def bucket_chain_rng(seed: int, bucket: int, chain: int) \
+        -> np.random.Generator:
+    """Chain ``chain`` of bucket ``bucket``; bucket 0 is the flat
+    `chain` stream (bucket-0 == flat-plan bit-equality)."""
+    if bucket == 0:
+        return chain_rng(seed, chain)
+    return np.random.default_rng(
+        (int(seed), BUCKET_TAG, int(bucket), int(chain)))
+
+
+def fleet_reserve_means_rng(mean_seed: int) -> np.random.Generator:
+    return np.random.default_rng((int(mean_seed), FLEET_RESERVE_TAG))
+
+
+def fleet_departures_rng(seed: int, episode: int) -> np.random.Generator:
+    return np.random.default_rng((int(seed), int(episode), FLEET_DEPART_TAG))
+
+
+def fleet_arrivals_rng(seed: int, episode: int) -> np.random.Generator:
+    return np.random.default_rng((int(seed), int(episode), FLEET_ARRIVE_TAG))
+
+
+def fleet_gibbs_rng(seed: int, episode: int) -> np.random.Generator:
+    return np.random.default_rng((int(seed), int(episode), FLEET_GIBBS_TAG))
+
+
+def fleet_saa_rng(seed: int, episode: int) -> np.random.Generator:
+    return np.random.default_rng((int(seed), int(episode), FLEET_SAA_TAG))
+
+
+def lm_batch_rng(seed: int, slot: int, device: int) -> np.random.Generator:
+    return np.random.default_rng((int(seed), LM_TAG, int(slot), int(device)))
+
+
+# --------------------------------------------------------------------------
+# scalar pool -- one shared int key space, offset-managed (see docstring)
+# --------------------------------------------------------------------------
+
+_register(StreamSpec(
+    "batch", "scalar", (),
+    "Per-(seed, round, cluster, epoch) batch shuffles: "
+    "batch_seed(seed, rnd, m, l) = (seed*1_000_003 + rnd*971 + m*31 + l)"
+    " % 2**31.  The WAL replay / fleet index-table contract."))
+_register(StreamSpec(
+    "data", "scalar", (),
+    "Dataset synthesis + sequential CPSLDataset draws: default_rng(seed)"
+    " and the seed+1 / seed+2 feature-noise sub-streams."))
+_register(StreamSpec(
+    "network_means", "scalar", (),
+    "device_means(cfg, seed): per-device mean CPU freq / SNR draws."))
+_register(StreamSpec(
+    "network_draw", "scalar", (),
+    "One-shot sample_network draw (rt orchestrator): default_rng(seed)."))
+_register(StreamSpec(
+    "dynamics", "scalar", (),
+    "NetworkProcess innovations: seed + 1 (device_means consumed seed)."))
+_register(StreamSpec(
+    "gibbs", "scalar", (),
+    "Alg. 4 Gibbs sampler: default_rng(seed); multi-chain planners pass "
+    "chain_key(seed, c) through, landing in the `chain` tuple stream."))
+_register(StreamSpec(
+    "layout", "scalar", (),
+    "random_clustering baseline layouts: default_rng(seed)."))
+_register(StreamSpec(
+    "saa_network", "scalar", (),
+    "SAA cut selection's network draws: seed + 1; per-sample Gibbs "
+    "runs are seeded seed + j (CRN coupling across cuts)."))
+_register(StreamSpec(
+    "trainer_round", "scalar", (),
+    "Trainer per-round network draw: seed*1000 + rnd."))
+_register(StreamSpec(
+    "lm_device", "scalar", (),
+    "LMClusterData sequential per-device streams: seed + 7*d."))
+_register(StreamSpec(
+    "curve", "scalar", (),
+    "equal_split_curve's Monte-Carlo network draws: default_rng(seed)."))
+_register(StreamSpec(
+    "chaos", "scalar", (),
+    "rt chaos-schedule draws: default_rng(seed)."))
+
+
+def batch_seed(seed: int, rnd: int, m: int, l: int) -> int:  # noqa: E741
+    """Deterministic per-(round, cluster, epoch) seed for batch
+    shuffles -- shared by the live pipeline, the WAL replay path and
+    the fleet index tables (moved here from repro.data.pipeline, which
+    re-exports it)."""
+    return (seed * 1_000_003 + rnd * 971 + m * 31 + l) % (2 ** 31)
+
+
+def batch_rng(seed: int, rnd: int, m: int, l: int) \
+        -> np.random.Generator:  # noqa: E741
+    return np.random.default_rng(batch_seed(seed, rnd, m, l))
+
+
+def premixed_rng(seed: int) -> np.random.Generator:
+    """A stream keyed by an already-mixed scalar (e.g. a batch_seed
+    value threaded through an API boundary)."""
+    return np.random.default_rng(int(seed))
+
+
+def data_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def network_means_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def network_draw_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def dynamics_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed + 1)
+
+
+def gibbs_rng(seed) -> np.random.Generator:
+    """Alg. 4's stream.  ``seed`` is an int (the flat / chain-0 stream)
+    or a ``chain_key`` tuple threaded through by multi-chain planners."""
+    if isinstance(seed, tuple):
+        s, c = seed
+        return chain_rng(int(s), int(c))
+    return np.random.default_rng(seed)
+
+
+def layout_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def saa_network_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed + 1)
+
+
+def trainer_round_rng(seed: int, rnd: int) -> np.random.Generator:
+    return np.random.default_rng(seed * 1000 + rnd)
+
+
+def lm_device_rng(seed: int, device: int) -> np.random.Generator:
+    return np.random.default_rng(seed + 7 * device)
+
+
+def curve_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def chaos_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# jax pool -- PRNGKey roots (disjointness by fold_in/split discipline)
+# --------------------------------------------------------------------------
+
+_register(StreamSpec(
+    "model", "jax", (),
+    "Model-parameter init root: PRNGKey(seed).  All per-device / "
+    "per-layer keys derive via split/fold_in."))
+_register(StreamSpec(
+    "fleet_master", "jax", (),
+    "Simulated fleet's channel-innovation root: PRNGKey(dcfg.seed), "
+    "folded per mean-seed under x64."))
+_register(StreamSpec(
+    "sampler", "jax", (),
+    "Token-sampling keys for the LM serving demo: PRNGKey(seed)."))
+_register(StreamSpec(
+    "warmup", "jax", (),
+    "Throwaway PRNGKey(0) for shape-only warmup traces (results "
+    "discarded; never mixes into trained state)."))
+
+
+def model_key(seed: int):
+    import jax
+    return jax.random.PRNGKey(int(seed))
+
+
+def fleet_master_key(seed: int):
+    import jax
+    return jax.random.PRNGKey(int(seed))
+
+
+def sampler_key(seed: int):
+    import jax
+    return jax.random.PRNGKey(int(seed))
+
+
+def warmup_key():
+    import jax
+    return jax.random.PRNGKey(0)

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import streams
 from repro.configs.base import CPSLConfig, FleetConfig
 from repro.core import latency as lt
 from repro.core import resource as rs
@@ -111,7 +112,7 @@ class CPSLTrainer:
     # -- round-level resource management (paper small timescale) -------------
 
     def _plan_round(self, v: int, rnd: int):
-        rng = np.random.default_rng(self.tcfg.seed * 1000 + rnd)
+        rng = streams.trainer_round_rng(self.tcfg.seed, rnd)
         net = sample_network(self.ncfg, self.mu_f, self.mu_snr, rng)
         M, K = self.cpsl.ccfg.n_clusters, self.cpsl.ccfg.cluster_size
         kind = self.tcfg.resource_mgmt

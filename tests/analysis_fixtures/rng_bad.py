@@ -1,0 +1,22 @@
+"""Tripping fixture for repro.analysis.rng_lint — every construction
+below violates a rule (negative control: rng_clean.py).  Never imported
+by tests; only parsed."""
+
+import numpy as np
+import jax
+
+
+def nonliteral(seed):
+    return np.random.default_rng(seed * 3 + 1)      # RNG001 (non-literal)
+
+
+def scalar_literal():
+    return np.random.default_rng(1234)              # RNG001 (raw scalar)
+
+
+def unregistered_tuple():
+    return np.random.default_rng((1, 2, 3))         # RNG002 (no namespace)
+
+
+def raw_jax_key():
+    return jax.random.PRNGKey(0)                    # RNG004 (raw key root)

@@ -1,0 +1,20 @@
+"""Negative control for repro.analysis.rng_lint — every construction
+below is allowed.  Never imported by tests; only parsed."""
+
+import numpy as np
+
+from repro import streams
+
+
+def registered_constructor():
+    return streams.chain_rng(0, 3)
+
+
+def literal_registered_tuple():
+    # matches the fleet_departures pattern (Sym(seed), Sym(episode), 11)
+    return np.random.default_rng((0, 7, 11))
+
+
+def os_entropy():
+    # unseeded: OS entropy, no namespace to police
+    return np.random.default_rng()

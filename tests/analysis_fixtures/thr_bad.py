@@ -1,0 +1,28 @@
+"""Tripping fixture for repro.analysis.thread_lint — one class, one
+violation per rule (negative control: thr_clean.py).  Never imported by
+tests; only parsed."""
+
+import threading
+
+
+class Racy:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.unannotated = set()          # THR001 (dual-root, no note)
+        self.locked = {}                  # guarded-by: _lock
+        self.bad_none = 0                 # guarded-by: none
+        self.bad_lock = 0                 # guarded-by: _nosuch
+        self.main_only = []               # guarded-by: main-thread
+
+    def start(self):
+        threading.Thread(target=self._worker, daemon=True).start()
+
+    def _worker(self):
+        self.unannotated.add(1)
+        self.main_only.append(1)          # THR004: thread root access
+        with self._lock:
+            self.locked["w"] = 1          # fine: lock held
+
+    def poke(self):
+        self.unannotated.add(2)           # THR001 pairs with _worker
+        self.locked["m"] = 2              # THR002: lock not held

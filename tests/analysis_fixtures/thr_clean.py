@@ -1,0 +1,30 @@
+"""Negative control for repro.analysis.thread_lint — a disciplined
+class: dual-root state locked, single-root state annotated.  Never
+imported by tests; only parsed."""
+
+import queue
+import threading
+
+
+class Disciplined:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.inbox = queue.Queue()        # exempt: thread-safe by type
+        self.roster = {}                  # guarded-by: _lock
+        self.counter = 0                  # guarded-by: none (GIL-atomic int snapshot)
+        self.cache = {}                   # guarded-by: main-thread
+
+    def start(self):
+        threading.Thread(target=self._worker, daemon=True).start()
+
+    def _worker(self):
+        with self._lock:
+            self.roster["w"] = 1
+        self.inbox.put(1)
+
+    def poke(self):
+        with self._lock:
+            n = len(self.roster)
+        self.counter += 1
+        self.cache["n"] = n
+        return n

@@ -1,0 +1,155 @@
+"""Regression for the rt/ runtime's shared-state contracts.
+
+The race question ISSUE 10 raised — do reader threads write the
+server's GRAD/ACK replay caches or the membership roster while the main
+thread reads them? — is answered *statically* by thread_lint's root
+analysis: the caches are main-thread-only (reader threads only
+``inbox.put``; the main thread's inbox pump does all cache writes),
+while the roster (``channels``/``last_seen``/``dead``) is dual-rooted
+(main + the orchestrator's membership thread via ``attach``), which is
+exactly why every roster access now holds ``_roster_lock``.
+
+These tests pin the computed root sets, so a future edit that leaks a
+cache write into a reader thread (or adds an unlocked roster access)
+fails CI twice: here, and in ``python -m repro.analysis --check``.  The
+hammer tests then exercise the lock plan dynamically: membership-thread
+``attach``/``is_attached_live`` churn racing the main thread's
+``_send``/``_mark_dead``/``wait_ready``-style reads.
+"""
+
+import queue
+import threading
+from pathlib import Path
+
+from repro.analysis import thread_lint
+
+SERVER_PY = Path(__file__).resolve().parent.parent \
+    / "src" / "repro" / "rt" / "server.py"
+
+
+# -- static proof: thread-root sets -------------------------------------------
+
+def _roots():
+    return thread_lint.attr_roots(SERVER_PY.read_text(), "RTServer")
+
+
+def test_grad_ack_caches_are_main_thread_only():
+    roots = _roots()
+    assert roots["_grad_cache"] == {"main"}
+    assert roots["_ack_cache"] == {"main"}
+
+
+def test_ready_and_round_sets_are_main_thread_only():
+    roots = _roots()
+    assert roots["ready"] == {"main"}
+    assert roots["_round_dropped"] == {"main"}
+    assert roots["_round_recovered"] == {"main"}
+
+
+def test_roster_is_dual_rooted_hence_locked():
+    roots = _roots()
+    for attr in ("channels", "last_seen", "dead"):
+        assert {"main", "membership"} <= roots[attr], (attr, roots[attr])
+
+
+def test_rt_tree_passes_thread_lint():
+    src = Path(__file__).resolve().parent.parent / "src" / "repro"
+    assert thread_lint.run(src) == []
+
+
+# -- dynamic proof: attach vs round-drive hammer --------------------------------
+
+class FakeChannel:
+    """recv blocks until close() (so each reader parks), send fails
+    after close (so a replaced channel's _send marks the gid dead,
+    exactly like a real torn socket)."""
+
+    def __init__(self):
+        self.closed = threading.Event()
+        self.n_sent = 0
+
+    def recv(self, timeout=None):
+        self.closed.wait()
+        raise ConnectionError("closed")
+
+    def send(self, mtype, payload):
+        if self.closed.is_set():
+            raise OSError("closed")
+        self.n_sent += 1
+
+    def close(self):
+        self.closed.set()
+
+
+def _bare_server():
+    """An RTServer with only the connection roster wired up — the
+    methods under test (attach/_send/_mark_dead/is_attached_live) touch
+    nothing else, and skipping __init__ keeps the hammer model-free."""
+    from repro.rt.server import RTServer
+
+    srv = RTServer.__new__(RTServer)
+    srv._roster_lock = threading.RLock()
+    srv.channels, srv.last_seen = {}, {}
+    srv.dead, srv.ready = set(), set()
+    srv.inbox = queue.Queue()
+    return srv
+
+
+def test_attach_vs_round_drive_hammer():
+    srv = _bare_server()
+    gids = list(range(4))
+    errors = []
+
+    def membership(g):
+        try:
+            for _ in range(100):
+                srv.attach(g, FakeChannel())
+                srv.is_attached_live(g)
+        except Exception as e:  # pragma: no cover - the regression
+            errors.append(e)
+
+    threads = [threading.Thread(target=membership, args=(g,))
+               for g in gids]
+    for t in threads:
+        t.start()
+    try:
+        while any(t.is_alive() for t in threads):
+            # main-thread round drive: sends, straggler kill, and a
+            # wait_ready-style locked roster read
+            for g in gids:
+                srv._send(g, 1, b"x")
+            srv._mark_dead(gids[0])
+            with srv._roster_lock:
+                pending = set(gids) - srv.ready - srv.dead
+            assert pending <= set(gids)
+    finally:
+        for t in threads:
+            t.join(timeout=60)
+    assert not errors, errors
+    with srv._roster_lock:
+        assert set(srv.channels) == set(gids)
+    for g in gids:
+        srv.attach(g, FakeChannel())   # revive anything _mark_dead hit
+    assert all(srv.is_attached_live(g) for g in gids)
+    with srv._roster_lock:
+        assert srv.dead == set()
+
+
+def test_concurrent_reattach_same_gid():
+    srv = _bare_server()
+    errors = []
+
+    def churn():
+        try:
+            for _ in range(100):
+                srv.attach(0, FakeChannel())
+        except Exception as e:  # pragma: no cover - the regression
+            errors.append(e)
+
+    threads = [threading.Thread(target=churn) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert srv.is_attached_live(0)

@@ -1,0 +1,156 @@
+"""Per-stream bit-exactness for the ``repro.streams`` registry.
+
+Every registered constructor must reproduce, byte-for-byte, the raw key
+it replaced at its call sites — these tests pin that contract (the
+generator *state* is compared, so any drift in the key arithmetic shows
+up before a single draw).  The registry's disjointness proof and its
+banned-pattern rules are exercised on synthetic registries too.
+"""
+
+import numpy as np
+import pytest
+
+from repro import streams
+from repro.streams import (CHAIN_MAX, Sym, StreamSpec, registry_overlaps)
+
+
+def state(rng: np.random.Generator):
+    return rng.bit_generator.state
+
+
+# -- tuple pool -------------------------------------------------------------
+
+def test_chain_zero_is_flat_stream():
+    # the decision-identity anchor: chain 0 IS default_rng(seed)
+    for seed in (0, 1, 42, 2**20):
+        assert state(streams.chain_rng(seed, 0)) == \
+            state(np.random.default_rng(seed))
+
+
+def test_chain_key_and_rng():
+    assert streams.chain_key(7, 0) == 7
+    assert streams.chain_key(7, 3) == (7, 3)
+    assert state(streams.chain_rng(7, 3)) == \
+        state(np.random.default_rng((7, 3)))
+
+
+def test_chain_bound_enforced():
+    with pytest.raises(AssertionError):
+        streams.chain_key(0, CHAIN_MAX)
+    with pytest.raises(AssertionError):
+        streams.chain_key(0, -1)
+
+
+def test_bucket_chain_bucket0_delegates_to_flat_chain():
+    assert state(streams.bucket_chain_rng(5, 0, 2)) == \
+        state(streams.chain_rng(5, 2))
+    assert state(streams.bucket_chain_rng(5, 0, 0)) == \
+        state(np.random.default_rng(5))
+
+
+def test_bucket_chain_tagged():
+    assert state(streams.bucket_chain_rng(5, 3, 2)) == \
+        state(np.random.default_rng((5, 6151, 3, 2)))
+
+
+def test_fleet_streams_reproduce_raw_keys():
+    pairs = [
+        (streams.fleet_departures_rng(3, 9), (3, 9, 11)),
+        (streams.fleet_arrivals_rng(3, 9), (3, 9, 13)),
+        (streams.fleet_gibbs_rng(3, 9), (3, 9, 17)),
+        (streams.fleet_saa_rng(3, 9), (3, 9, 19)),
+        (streams.fleet_reserve_means_rng(4), (4, 9967)),
+        (streams.lm_batch_rng(2, 5, 11), (2, 7433, 5, 11)),
+    ]
+    for rng, key in pairs:
+        assert state(rng) == state(np.random.default_rng(key)), key
+
+
+def test_lm_batch_retag_avoids_fleet_collision():
+    # the historical untagged (seed, slot, device) key collided with the
+    # fleet churn namespaces whenever device hit 11/13/17/19; the 7433
+    # retag makes the pattern length-4, provably disjoint
+    for tag in (11, 13, 17, 19):
+        assert state(streams.lm_batch_rng(3, 9, tag)) != \
+            state(np.random.default_rng((3, 9, tag)))
+
+
+# -- scalar pool ------------------------------------------------------------
+
+def test_batch_seed_formula():
+    assert streams.batch_seed(5, 2, 1, 3) == \
+        (5 * 1_000_003 + 2 * 971 + 1 * 31 + 3) % 2**31
+
+
+def test_scalar_constructors_reproduce_raw_seeds():
+    checks = [
+        (streams.batch_rng(5, 2, 1, 3), streams.batch_seed(5, 2, 1, 3)),
+        (streams.premixed_rng(123), 123),
+        (streams.data_rng(8), 8),
+        (streams.network_means_rng(8), 8),
+        (streams.network_draw_rng(8), 8),
+        (streams.dynamics_rng(8), 9),            # seed + 1
+        (streams.gibbs_rng(8), 8),
+        (streams.layout_rng(8), 8),
+        (streams.saa_network_rng(8), 9),         # seed + 1
+        (streams.trainer_round_rng(8, 4), 8004),  # seed*1000 + rnd
+        (streams.lm_device_rng(8, 3), 29),        # seed + 7*d
+        (streams.curve_rng(8), 8),
+        (streams.chaos_rng(8), 8),
+    ]
+    for rng, seed in checks:
+        assert state(rng) == state(np.random.default_rng(seed)), seed
+
+
+def test_gibbs_accepts_chain_key_tuples():
+    # multi-chain planners thread chain_key(seed, c) through the
+    # gibbs_clustering(seed=...) API boundary
+    assert state(streams.gibbs_rng((6, 2))) == state(streams.chain_rng(6, 2))
+    assert state(streams.gibbs_rng(streams.chain_key(6, 0))) == \
+        state(np.random.default_rng(6))
+
+
+# -- jax pool ---------------------------------------------------------------
+
+def test_jax_key_roots_reproduce_prngkeys():
+    import jax
+
+    for fn, seed in ((streams.model_key, 5),
+                     (streams.fleet_master_key, 6),
+                     (streams.sampler_key, 7)):
+        assert np.array_equal(fn(seed), jax.random.PRNGKey(seed))
+    assert np.array_equal(streams.warmup_key(), jax.random.PRNGKey(0))
+
+
+# -- registry disjointness proof ---------------------------------------------
+
+def test_registry_is_disjoint():
+    assert registry_overlaps() == []
+
+
+def test_registry_overlap_detected_on_synthetic_collision():
+    reg = {
+        "a": StreamSpec("a", "tuple", (Sym("s"), 11), ""),
+        "b": StreamSpec("b", "tuple",
+                        (Sym("t", 0, 100), Sym("u", 5, 20)), ""),
+    }
+    problems = registry_overlaps(reg)
+    assert len(problems) == 1 and "a and b" in problems[0]
+
+
+def test_registry_accepts_disjoint_tags():
+    reg = {
+        "a": StreamSpec("a", "tuple", (Sym("s"), 11), ""),
+        "b": StreamSpec("b", "tuple", (Sym("t"), 13), ""),
+        "c": StreamSpec("c", "tuple", (Sym("u"), Sym("v"), 11), ""),
+    }
+    assert registry_overlaps(reg) == []
+
+
+def test_registry_bans_length1_tuple_patterns():
+    # SeedSequence hashes (s,) and s identically, so a 1-tuple pattern
+    # silently aliases the scalar pool
+    assert state(np.random.default_rng((3,))) == \
+        state(np.random.default_rng(3))
+    reg = {"solo": StreamSpec("solo", "tuple", (Sym("s"),), "")}
+    assert any("length-1" in p for p in registry_overlaps(reg))
